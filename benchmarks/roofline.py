@@ -1,0 +1,57 @@
+"""Roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline source).
+
+Reads artifacts/dryrun2/*.json (written by repro.launch.dryrun) and emits
+per (arch x shape x mesh): the three roofline terms, dominant bottleneck,
+MODEL_FLOPS/HLO ratio, roofline fraction, and fit data.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DEFAULT_DIR = "artifacts/final"
+
+
+def load_rows(art_dir: str = DEFAULT_DIR, mesh: str = ""):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        r = json.load(open(f))
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skip":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": "skip",
+                         "reason": r["reason"]})
+            continue
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": "error"})
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok",
+            "t_compute_s": rf["t_compute_s"], "t_memory_s": rf["t_memory_s"],
+            "t_collective_s": rf["t_collective_s"],
+            "dominant": rf["dominant"],
+            "roofline_fraction": rf["roofline_fraction"],
+            "model_flops_ratio": rf["model_flops_ratio"],
+            "mfu": rf["mfu"],
+            "resident_GiB": round(r.get("resident_bytes",
+                                        r["bytes_per_device"]) / 2**30, 2),
+            "xla_mem_GiB": round(r["bytes_per_device"] / 2**30, 2),
+        })
+    return rows
+
+
+def main(art_dir: str = DEFAULT_DIR):
+    rows = load_rows(art_dir, mesh="16x16")
+    ok = [r for r in rows if r["status"] == "ok"]
+    ok.sort(key=lambda r: r["roofline_fraction"])
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,67 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows per bench plus table sections.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _section(title):
+    print(f"\n# === {title} ===", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    t0 = time.time()
+    print("name,us_per_call,derived")
+
+    _section("Paper Fig.7 + Table 1: recording delays (emulated networks)")
+    from benchmarks import record_replay
+    for r in record_replay.main(quick=args.quick):
+        print(f"record_{r['workload']}_{r['variant']}_{r['net']},"
+              f"{r['delay_s']*1e6:.0f},"
+              f"rts={r['blocking_rts']};syncMB={r['sync_MB']};"
+              f"mispredicts={r['mispredicts']}")
+
+    _section("Paper Table 2: replay vs native")
+    from benchmarks import replay_native
+    for r in replay_native.main(quick=args.quick):
+        print(f"replay_{r['arch']},{r['replay_steady_ms']*1e3:.0f},"
+              f"native_ms={r['native_steady_ms']};"
+              f"launch_speedup={r['launch_speedup']}x;"
+              f"steady_ratio={r['steady_ratio']}")
+
+    _section("Roofline (from dry-run artifacts; single-pod)")
+    from benchmarks import roofline
+    rows = roofline.main()
+    ok = [r for r in rows if r["status"] == "ok"]
+    for r in ok:
+        print(f"roofline_{r['arch']}_{r['shape']},"
+              f"{max(r['t_compute_s'], r['t_memory_s'], r['t_collective_s'])*1e6:.0f},"
+              f"dom={r['dominant']};frac={r['roofline_fraction']:.3f};"
+              f"mfu={r['mfu']:.3f};res={r['resident_GiB']}GiB")
+    skips = [r for r in rows if r["status"] == "skip"]
+    print(f"# roofline: {len(ok)} cells ok, {len(skips)} documented skips")
+
+    _section("Kernels (numerics + jnp-path CPU timing)")
+    from benchmarks import kernels_bench
+    for r in kernels_bench.main(quick=args.quick):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+
+    _section("Gradient compression (collective wire bytes)")
+    from benchmarks import grad_compress_bench
+    for r in grad_compress_bench.main(quick=args.quick):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+
+    print(f"\n# total bench wall time: {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

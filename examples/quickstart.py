@@ -1,0 +1,23 @@
+"""Quickstart: train a small LM end-to-end with checkpoints, then resume.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main as train
+
+
+if __name__ == "__main__":
+    with tempfile.TemporaryDirectory() as ckpt:
+        print("=== phase 1: train 40 steps with async checkpoints ===")
+        train(["--arch", "qwen2.5-3b", "--steps", "40", "--batch", "8",
+               "--seq", "64", "--lr", "3e-3", "--ckpt-dir", ckpt,
+               "--ckpt-every", "20", "--log-every", "10"])
+        print("\n=== phase 2: crash-resume from the checkpoint, 20 more ===")
+        train(["--arch", "qwen2.5-3b", "--steps", "60", "--batch", "8",
+               "--seq", "64", "--lr", "3e-3", "--ckpt-dir", ckpt,
+               "--resume", "--log-every", "10"])

@@ -1,0 +1,118 @@
+"""Render EXPERIMENTS.md tables from dry-run artifacts."""
+import glob
+import json
+import os
+import sys
+
+
+def fmt(v, n=3):
+    if v == 0:
+        return "0"
+    if abs(v) >= 100 or abs(v) < 0.001:
+        return f"{v:.2e}"
+    return f"{v:.{n}f}"
+
+
+def dryrun_table(art="artifacts/final", mesh="16x16"):
+    rows = []
+    for f in sorted(glob.glob(f"{art}/*_{mesh}.json")):
+        r = json.load(open(f))
+        if r["mesh"] != mesh:
+            continue
+        rows.append(r)
+    out = ["| arch | shape | status | resident GiB/dev | HLO GFLOPs/dev | "
+           "coll GiB/dev | compile s |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | **skip** "
+                       f"(full attention @500k) | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{r['resident_bytes']/2**30:.2f} | "
+            f"{r['hlo']['flops']/1e9:.0f} | "
+            f"{r['hlo']['coll_bytes']/2**30:.2f} | {r['t_compile_s']:.0f} |")
+    return "\n".join(out)
+
+
+def multipod_table(art="artifacts/final"):
+    out = ["| arch | shape | 16x16 | 2x16x16 | pod-axis collectives |",
+           "|---|---|---|---|---|"]
+    cells = {}
+    for f in sorted(glob.glob(f"{art}/*.json")):
+        r = json.load(open(f))
+        cells.setdefault((r["arch"], r["shape"]), {})[r["mesh"]] = r
+    for (a, s), d in sorted(cells.items()):
+        r1, r2 = d.get("16x16"), d.get("2x16x16")
+        if not r1 or not r2:
+            continue
+        if r1["status"] == "skip":
+            out.append(f"| {a} | {s} | skip | skip | — |")
+            continue
+        ok1 = "ok" if r1["status"] == "ok" else "ERR"
+        ok2 = "ok" if r2["status"] == "ok" else "ERR"
+        pod = "yes" if (r2.get("hlo", {}).get("coll_bytes", 0) > 0) else "-"
+        out.append(f"| {a} | {s} | {ok1} | {ok2} | {pod} |")
+    return "\n".join(out)
+
+
+def roofline_table(art="artifacts/final", mesh="16x16"):
+    out = ["| arch | shape | T_comp s | T_mem s | T_coll s | dominant | "
+           "MODEL/HLO | roofline frac | MFU |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    rows = []
+    for f in sorted(glob.glob(f"{art}/*_{mesh}.json")):
+        r = json.load(open(f))
+        if r["status"] != "ok" or r["mesh"] != mesh:
+            continue
+        rows.append(r)
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(rf['t_compute_s'])} | "
+            f"{fmt(rf['t_memory_s'])} | {fmt(rf['t_collective_s'])} | "
+            f"{rf['dominant']} | {rf['model_flops_ratio']:.2f} | "
+            f"{rf['roofline_fraction']:.3f} | {rf['mfu']:.3f} |")
+    return "\n".join(out)
+
+
+def opt_compare(base="artifacts/final", opt="artifacts/final_opt"):
+    out = ["| arch | shape | variant | step s (base) | step s (opt) | "
+           "speedup | dominant (base→opt) |",
+           "|---|---|---|---|---|---|---|"]
+    for f in sorted(glob.glob(f"{opt}/*_16x16-*.json")):
+        r2 = json.load(open(f))
+        if r2["status"] != "ok":
+            continue
+        tag = f.rsplit("-", 1)[1][:-5]
+        bf = f"{base}/{r2['arch']}_{r2['shape']}_16x16.json"
+        if not os.path.exists(bf):
+            continue
+        r1 = json.load(open(bf))
+        if r1["status"] != "ok":
+            continue
+        t1 = max(r1["roofline"]["t_compute_s"], r1["roofline"]["t_memory_s"],
+                 r1["roofline"]["t_collective_s"])
+        t2 = max(r2["roofline"]["t_compute_s"], r2["roofline"]["t_memory_s"],
+                 r2["roofline"]["t_collective_s"])
+        out.append(
+            f"| {r2['arch']} | {r2['shape']} | {tag} | {fmt(t1)} | {fmt(t2)} | "
+            f"{t1/t2:.2f}x | {r1['roofline']['dominant']}→"
+            f"{r2['roofline']['dominant']} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("dryrun", "all"):
+        print("### dryrun\n" + dryrun_table())
+    if which in ("multipod", "all"):
+        print("\n### multipod\n" + multipod_table())
+    if which in ("roofline", "all"):
+        print("\n### roofline\n" + roofline_table())
+    if which in ("opt", "all"):
+        print("\n### opt\n" + opt_compare())

@@ -1,0 +1,113 @@
+"""Roofline terms for TPU v5e from the dry-run's compiled artifact.
+
+    T_compute    = flops_per_chip / PEAK_FLOPS
+    T_memory     = hbm_bytes_per_chip / HBM_BW
+    T_collective = wire_bytes_per_link / ICI_BW
+
+flops / bytes come from repro.analysis.hlo (per-device, trip-count
+corrected); MODEL_FLOPS is the analytic 6ND / 2ND budget so the
+MODEL/HLO ratio exposes remat & dispatch-einsum waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.models.config import ModelConfig
+
+PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    model_flops_per_chip: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the cell is to MXU-bound (compute roofline)."""
+        t = self.step_time
+        return self.t_compute / t if t else 0.0
+
+    @property
+    def model_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — 'useful' fraction of compiled compute."""
+        return self.model_flops_per_chip / self.flops if self.flops else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-flops utilization at the roofline-predicted step time."""
+        t = self.step_time
+        return (self.model_flops_per_chip / PEAK_FLOPS) / t if t else 0.0
+
+    def as_dict(self) -> Dict:
+        return {
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "flops_per_chip": self.flops, "hbm_bytes_per_chip": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "model_flops_per_chip": self.model_flops_per_chip,
+            "model_flops_ratio": self.model_flops_ratio,
+            "roofline_fraction": self.roofline_fraction, "mfu": self.mfu,
+        }
+
+
+def from_hlo(hlo_cost: Dict, model_flops_total: float, num_chips: int) -> Roofline:
+    mf = model_flops_total / num_chips
+    return Roofline(
+        t_compute=hlo_cost["flops"] / PEAK_FLOPS,
+        t_memory=hlo_cost["hbm_bytes"] / HBM_BW,
+        t_collective=hlo_cost["coll_bytes"] / ICI_BW,
+        flops=hlo_cost["flops"], hbm_bytes=hlo_cost["hbm_bytes"],
+        coll_bytes=hlo_cost["coll_bytes"], model_flops_per_chip=mf)
+
+
+def analytic_model_flops(cfg: ModelConfig, kind: str, batch: int,
+                         seq: int) -> float:
+    """MODEL_FLOPS: 6·N·D (train) / 2·N·D (prefill) / 2·N_active·B (decode),
+    plus the attention O(S²) (train/prefill) or O(S) (decode) term."""
+    n_active = cfg.param_count(active_only=True) - cfg.vocab_size * cfg.d_model \
+        * (1 if cfg.tie_embeddings else 2)
+    n_active += cfg.vocab_size * cfg.d_model  # lm head matmul is real compute
+    hd, H = cfg.hd(), cfg.num_heads
+
+    def attn_flops(tokens, ctx):
+        if cfg.family == "ssm":
+            return 0.0
+        L = cfg.num_layers if cfg.family != "hybrid" \
+            else cfg.num_layers // max(cfg.shared_every, 1)
+        if cfg.family == "audio":
+            L = cfg.num_layers  # decoder self-attn (cross handled below)
+        eff_ctx = min(ctx, cfg.sliding_window) if cfg.sliding_window else ctx
+        f = 4.0 * tokens * eff_ctx * H * hd * L
+        if kind in ("train", "prefill") and not cfg.sliding_window:
+            f *= 0.5  # causal
+        if cfg.family == "audio":
+            f += 4.0 * tokens * cfg.encdec.encoder_seq * H * hd * cfg.num_layers
+        return f
+
+    if kind == "train":
+        toks = batch * seq
+        return 6.0 * n_active * toks + 3.0 * attn_flops(toks, seq)
+    if kind == "prefill":
+        toks = batch * seq
+        return 2.0 * n_active * toks + attn_flops(toks, seq)
+    # decode: one token per sequence
+    return 2.0 * n_active * batch + attn_flops(batch, seq)

@@ -1,0 +1,34 @@
+"""Signing / fingerprints for recordings (paper §3.2: the cloud signs
+recordings; the TEE replayer only accepts signed ones)."""
+from __future__ import annotations
+
+import hashlib
+import hmac
+import json
+
+
+def fingerprint(*parts) -> str:
+    h = hashlib.sha256()
+    for p in parts:
+        if isinstance(p, bytes):
+            h.update(p)
+        else:
+            h.update(json.dumps(p, sort_keys=True, default=str).encode())
+    return h.hexdigest()
+
+
+def sign(payload: bytes, key: bytes) -> str:
+    return hmac.new(key, payload, hashlib.sha256).hexdigest()
+
+
+def verify(payload: bytes, signature: str, key: bytes) -> bool:
+    return hmac.compare_digest(sign(payload, key), signature)
+
+
+class TamperedRecordingError(Exception):
+    pass
+
+
+class TopologyMismatchError(Exception):
+    """Replay on hardware that does not match the recording (paper §2.4:
+    recordings are only valid for the exact GPU/mesh they were made for)."""

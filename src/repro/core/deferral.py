@@ -1,0 +1,160 @@
+"""Register-access deferral (paper §4.1) on the host<->accelerator channel.
+
+The paper's DriverShim queues GPU register accesses in program order,
+represents unread values as *symbols* so the driver keeps executing, and
+commits the queue in one network round trip when a value is actually needed
+(control dependency), at externalization points, or at explicit barriers.
+
+Here the "registers" are host<->device interactions of a serving/training
+runtime: dispatches (writes) and readbacks (reads: done-flags, token values,
+metrics).  ``CommitQueue`` preserves program order per stream, coalesces
+round trips, and supports symbolic reads exactly like the paper.
+
+This module is runtime-agnostic: the channel is any ``execute_batch(ops)``
+callable (a real device loop, or the NetworkEmulator-backed fake used by the
+paper-reproduction benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional
+
+_ids = itertools.count()
+
+
+class Symbol:
+    """A deferred read value (paper: symbolic register value)."""
+    __slots__ = ("sid", "site", "_value", "resolved")
+
+    def __init__(self, site: str):
+        self.sid = next(_ids)
+        self.site = site
+        self._value = None
+        self.resolved = False
+
+    @property
+    def value(self):
+        if not self.resolved:
+            raise UnresolvedSymbolError(f"symbol {self.sid} @ {self.site}")
+        return self._value
+
+    def resolve(self, v):
+        self._value = v
+        self.resolved = True
+
+    def __repr__(self):
+        return f"S{self.sid}({self._value if self.resolved else '?'})"
+
+
+class UnresolvedSymbolError(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class Op:
+    kind: str                  # "read" | "write" | "poll"
+    site: str                  # program location (paper: driver source loc)
+    payload: Any = None        # may contain Symbols (data dependencies)
+    symbol: Optional[Symbol] = None   # for reads
+
+
+def _resolve_payload(p):
+    if isinstance(p, Symbol):
+        return p.value
+    if isinstance(p, (list, tuple)):
+        return type(p)(_resolve_payload(x) for x in p)
+    if isinstance(p, dict):
+        return {k: _resolve_payload(v) for k, v in p.items()}
+    return p
+
+
+class CommitQueue:
+    """Per-stream deferred interaction queue (program order preserved).
+
+    ``channel(op) -> result_or_None`` executes ONE interaction on the
+    device side; a commit ships the whole queue in a single round trip and
+    the client executes ops in order, resolving intra-batch symbolic
+    references as it goes (the paper ships symbols to the client the same
+    way).  ``netem`` (optional) accounts the virtual network cost; the log
+    of committed interactions *is* the recording trace.
+    """
+
+    def __init__(self, channel: Callable[[Op], Any],
+                 netem=None, name: str = "stream0"):
+        self.channel = channel
+        self.netem = netem
+        self.name = name
+        self.queue: List[Op] = []
+        self.log: List[Op] = []            # committed interaction log
+        self.commits = 0
+        self.deferred_total = 0
+
+    # -- deferral API (paper fig. 5b) --
+    def write(self, site: str, payload=None):
+        self.queue.append(Op("write", site, payload))
+        self.deferred_total += 1
+
+    def read(self, site: str) -> Symbol:
+        s = Symbol(site)
+        self.queue.append(Op("read", site, symbol=s))
+        self.deferred_total += 1
+        return s
+
+    def poll(self, site: str, predicate_site: str = "") -> Symbol:
+        """Offloaded polling loop (§4.3): executes device-side in the same
+        commit; the read value is the loop's final state / trip count."""
+        s = Symbol(site)
+        self.queue.append(Op("poll", site, payload=predicate_site, symbol=s))
+        self.deferred_total += 1
+        return s
+
+    def need(self, symbol: Symbol):
+        """Control dependency on a deferred read -> synchronous commit."""
+        if not symbol.resolved:
+            self.commit()
+        return symbol.value
+
+    # -- commit --
+    def execute_ops(self, ops: List[Op]) -> List[Any]:
+        """Client-side in-order execution; resolves symbols as it goes so
+        later ops in the same batch may reference earlier reads."""
+        results = []
+        for op in ops:
+            op.payload = _resolve_payload(op.payload)
+            res = self.channel(op)
+            if op.symbol is not None:
+                op.symbol.resolve(res)
+                results.append(res)
+        return results
+
+    def commit(self, approx_bytes: int = 256) -> List[Any]:
+        if not self.queue:
+            return []
+        ops = self.queue
+        self.queue = []
+        results = self.execute_ops(ops)
+        self.log.extend(ops)
+        self.commits += 1
+        if self.netem is not None:
+            sz = sum(64 + _payload_bytes(o.payload) for o in ops)
+            self.netem.round_trip(send_bytes=max(sz, approx_bytes),
+                                  recv_bytes=64 + 8 * len(results))
+        return results
+
+    def flush(self):
+        return self.commit()
+
+
+def _payload_bytes(p) -> int:
+    if p is None:
+        return 0
+    if isinstance(p, (bytes, bytearray)):
+        return len(p)
+    if isinstance(p, (list, tuple)):
+        return sum(_payload_bytes(x) for x in p)
+    if isinstance(p, dict):
+        return sum(_payload_bytes(v) for v in p.values())
+    if hasattr(p, "nbytes"):
+        return int(p.nbytes)
+    return 8

@@ -1,0 +1,59 @@
+"""Network emulator (the paper's NetEm setup, §7.2) — virtual-time model of
+the cloud<->client link so record-phase benchmarks reproduce Fig. 7 /
+Table 1 quantitatively on this CPU-only container.
+
+WiFi-like:     RTT 20 ms, BW 80 Mbps
+cellular-like: RTT 50 ms, BW 40 Mbps
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class NetProfile:
+    name: str
+    rtt_s: float
+    bw_bytes_s: float
+
+
+WIFI = NetProfile("wifi", 0.020, 80e6 / 8)
+CELLULAR = NetProfile("cellular", 0.050, 40e6 / 8)
+LOCAL = NetProfile("local", 2e-6, 10e9)  # same-SoC reference
+
+
+class NetworkEmulator:
+    def __init__(self, profile: NetProfile):
+        self.profile = profile
+        self.reset()
+
+    def reset(self):
+        self.virtual_time_s = 0.0
+        self.round_trips = 0          # BLOCKING round trips (paper Table 1)
+        self.async_trips = 0          # speculative commits: wire, no stall
+        self.bytes_sent = 0
+        self.bytes_received = 0
+
+    def round_trip(self, send_bytes: int = 64, recv_bytes: int = 64):
+        """One synchronous request/response over the link."""
+        self.round_trips += 1
+        self.bytes_sent += send_bytes
+        self.bytes_received += recv_bytes
+        self.virtual_time_s += self.profile.rtt_s + \
+            (send_bytes + recv_bytes) / self.profile.bw_bytes_s
+
+    def async_trip(self, send_bytes: int = 256, recv_bytes: int = 64):
+        """Asynchronous commit: consumes bandwidth but hides the RTT."""
+        self.async_trips += 1
+        self.bytes_sent += send_bytes
+        self.bytes_received += recv_bytes
+        self.virtual_time_s += (send_bytes + recv_bytes) / self.profile.bw_bytes_s
+
+    def one_way(self, nbytes: int):
+        self.bytes_sent += nbytes
+        self.virtual_time_s += self.profile.rtt_s / 2 + \
+            nbytes / self.profile.bw_bytes_s
+
+    def snapshot(self) -> dict:
+        return {"time_s": self.virtual_time_s, "round_trips": self.round_trips,
+                "bytes": self.bytes_sent + self.bytes_received}

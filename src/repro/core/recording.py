@@ -1,0 +1,75 @@
+"""Recording format — the TPU analogue of the paper's CPU/GPU interaction log.
+
+A recording is a signed, self-describing artifact containing:
+  * manifest   — workload/config/mesh fingerprints, I/O avals + shardings,
+                 donation map, cost/memory analysis (the paper's job
+                 metadata), creation info;
+  * payload    — the serialized XLA executable
+                 (jax.experimental.serialize_executable), i.e. the exact
+                 "stimuli script" the accelerator will execute;
+  * signature  — HMAC-SHA256 over manifest+payload.
+
+The replayer (repro.core.replay) verifies the signature and the topology
+fingerprint before loading; it never retraces or recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import pickle
+from typing import Any, Dict, Optional
+
+import msgpack
+
+from repro.core.attest import (TamperedRecordingError, fingerprint, sign,
+                               verify)
+
+FORMAT_VERSION = 2
+
+
+@dataclasses.dataclass
+class Recording:
+    manifest: Dict[str, Any]
+    payload: bytes                 # serialized executable
+    trees: bytes                   # pickled (in_tree, out_tree)
+    signature: str = ""
+
+    def signable(self) -> bytes:
+        return msgpack.packb({"m": self.manifest}, use_bin_type=True) + \
+            self.payload + self.trees
+
+    def sign_with(self, key: bytes) -> "Recording":
+        self.signature = sign(self.signable(), key)
+        return self
+
+    def to_bytes(self) -> bytes:
+        return msgpack.packb({
+            "v": FORMAT_VERSION, "manifest": self.manifest,
+            "payload": self.payload, "trees": self.trees,
+            "signature": self.signature}, use_bin_type=True)
+
+    @staticmethod
+    def from_bytes(blob: bytes, key: Optional[bytes] = None) -> "Recording":
+        try:
+            d = msgpack.unpackb(blob, raw=False)
+            if d.get("v") != FORMAT_VERSION:
+                raise TamperedRecordingError(f"format version {d.get('v')}")
+            rec = Recording(d["manifest"], d["payload"], d["trees"],
+                            d["signature"])
+        except TamperedRecordingError:
+            raise
+        except Exception as e:  # corrupted framing == tampering
+            raise TamperedRecordingError(f"unparseable recording: {e}")
+        if key is not None and not verify(rec.signable(), rec.signature, key):
+            raise TamperedRecordingError("signature verification failed")
+        return rec
+
+    def save(self, path: str, key: bytes):
+        self.sign_with(key)
+        with open(path, "wb") as f:
+            f.write(self.to_bytes())
+
+    @staticmethod
+    def load(path: str, key: Optional[bytes] = None) -> "Recording":
+        with open(path, "rb") as f:
+            return Recording.from_bytes(f.read(), key)

@@ -1,0 +1,77 @@
+"""The replayer — CODY's in-TEE component.
+
+Deliberately minimal: it imports NO model code, NO configs, NO training
+machinery (tests assert this).  It loads a signed recording, verifies
+(signature, format, topology), deserializes the executable, and executes it
+on new inputs.  There is no tracing, no compilation, no Python model in the
+TCB — the executable *is* the recorded interaction script.
+
+Mirrors the paper's replayer obligations:
+  * verify authenticity (cloud signature)            -> HMAC check
+  * match recording to the exact hardware (§2.4)     -> topology fingerprint
+  * reset/clean state around replay (§3.2)           -> fresh buffers, no
+    state escapes except declared outputs (donation honored by XLA)
+"""
+from __future__ import annotations
+
+import pickle
+from typing import Any, Optional
+
+import jax
+from jax.experimental import serialize_executable as se
+
+from repro.core.attest import (TamperedRecordingError, TopologyMismatchError,
+                               fingerprint)
+from repro.core.recording import Recording
+
+
+def _topology_fingerprint() -> str:
+    devs = jax.devices()
+    return fingerprint(sorted(str(d.device_kind) for d in devs), len(devs))
+
+
+class Replayer:
+    def __init__(self, key: Optional[bytes] = None,
+                 enforce_topology: bool = True):
+        self._key = key
+        self._enforce_topology = enforce_topology
+        self._loaded = {}
+        self.stats = {"loads": 0, "executions": 0, "rejected": 0}
+
+    def load(self, path_or_bytes, name: Optional[str] = None):
+        try:
+            if isinstance(path_or_bytes, (bytes, bytearray)):
+                rec = Recording.from_bytes(bytes(path_or_bytes), self._key)
+            else:
+                rec = Recording.load(path_or_bytes, self._key)
+        except TamperedRecordingError:
+            self.stats["rejected"] += 1
+            raise
+        if rec.manifest.get("exec_fingerprint") != fingerprint(rec.payload):
+            self.stats["rejected"] += 1
+            raise TamperedRecordingError("payload fingerprint mismatch")
+        if self._enforce_topology and \
+                rec.manifest["topology"] != _topology_fingerprint():
+            self.stats["rejected"] += 1
+            raise TopologyMismatchError(
+                "recording was made for different hardware "
+                f"({rec.manifest['topology'][:12]}... vs "
+                f"{_topology_fingerprint()[:12]}...)")
+        in_tree, out_tree = pickle.loads(rec.trees)
+        exe = se.deserialize_and_load(rec.payload, in_tree, out_tree)
+        nm = name or rec.manifest["name"]
+        self._loaded[nm] = (exe, rec.manifest)
+        self.stats["loads"] += 1
+        return nm
+
+    def manifest(self, name: str) -> dict:
+        return self._loaded[name][1]
+
+    def execute(self, name: str, *args) -> Any:
+        """Run the recorded executable on new inputs.  No retracing ever."""
+        exe, _man = self._loaded[name]
+        self.stats["executions"] += 1
+        return exe(*args)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._loaded

@@ -1,0 +1,99 @@
+"""Mamba2 SSD intra-chunk kernel (Pallas TPU).
+
+Grid (B, nc): one program handles one [Q, ...] chunk — computes the
+intra-chunk (masked decay) contribution, the off-diagonal term from the
+carried state, and the new chunk state.  The chunk state is carried across
+the sequentially-iterated nc grid axis in VMEM scratch (same pattern the
+flash kernel uses for online softmax), so the HBM traffic is exactly one
+read of x/B/C/decay and one write of y + final state.
+
+Head dim is folded into the chunk program (nh*P lanes); Q and N are the
+MXU dims (Q=chunk=256, N=64/128 -> pad N to 128 on real hardware).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention import pl_scratch
+
+
+def _kernel(xbar_ref, b_ref, c_ref, cum_ref, y_ref, st_ref, h_sc, *, n_c):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_sc[...] = jnp.zeros_like(h_sc)
+
+    xbar = xbar_ref[0, 0].astype(jnp.float32)    # [Q, nh, P]
+    Bm = b_ref[0, 0].astype(jnp.float32)         # [Q, N]
+    Cm = c_ref[0, 0].astype(jnp.float32)         # [Q, N]
+    cum = cum_ref[0, 0].astype(jnp.float32)      # [Q, nh]
+    Q = xbar.shape[0]
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [Q,Q]
+    decay = jnp.exp(cum[:, None, :] - cum[None, :, :])                # [Q,Q,nh]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    lmat = jnp.where((ii >= jj)[..., None], decay, 0.0)
+    y_diag = jnp.einsum("ij,ijh,jhp->ihp", scores, lmat, xbar)
+
+    h_prev = h_sc[...]                                                # [nh,P,N]
+    y_off = jnp.einsum("in,ih,hpn->ihp", Cm, jnp.exp(cum), h_prev)
+    y_ref[0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    rem = jnp.exp(cum[-1:, :] - cum)                                  # [Q,nh]
+    new_h = h_prev * jnp.exp(cum[-1])[:, None, None] + \
+        jnp.einsum("jn,jh,jhp->hpn", Bm, rem, xbar)
+    h_sc[...] = new_h
+
+    @pl.when(ic == n_c - 1)
+    def _fini():
+        st_ref[0] = new_h.astype(st_ref.dtype)
+
+
+def mamba_chunk_scan(xbar, B_c, C_c, cum, *, interpret=True):
+    """xbar [B,S,nh,P]; B_c,C_c [B,S,N]; cum [B,S,nh] (log-decay cumsum,
+    RESET per chunk by the caller) ; chunk = caller's reshape unit.
+    Returns (y [B,S,nh,P], final_state [B,nh,P,N]).
+
+    The caller passes S = nc*Q with cum already chunk-local (as produced by
+    repro.models.ssm).  Grid (B, nc)."""
+    B, S, nh, P = xbar.shape
+    N = B_c.shape[-1]
+    # chunk length: the model uses cfg.ssm.chunk; infer from cum resets is
+    # fragile — require the caller to pass chunked views instead:
+    raise NotImplementedError("use mamba_chunk_scan_chunked")
+
+
+def mamba_chunk_scan_chunked(xbar, B_c, C_c, cum, *, interpret=True):
+    """Chunked views: xbar [B,nc,Q,nh,P]; B_c,C_c [B,nc,Q,N];
+    cum [B,nc,Q,nh] -> (y [B,nc,Q,nh,P], final_state [B,nh,P,N])."""
+    B, nc, Q, nh, P = xbar.shape
+    N = B_c.shape[-1]
+    kernel = functools.partial(_kernel, n_c=nc)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, nh, P), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, nh), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, nh, P), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, nh, P, N), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, Q, nh, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, nh, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pl_scratch((nh, P, N))],
+        interpret=interpret,
+    )(xbar, B_c, C_c, cum)
+    return y, st

@@ -1,0 +1,69 @@
+"""mLSTM chunkwise kernel (Pallas TPU): matrix-memory linear attention with
+per-head scalar decay, numerator+denominator carried across chunks in VMEM
+scratch (grid (B, nc), nc sequential).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention import pl_scratch
+
+
+def _kernel(q_ref, k_ref, v_ref, cf_ref, li_ref, y_ref, h_sc, n_sc, *, n_c):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_sc[...] = jnp.zeros_like(h_sc)
+        n_sc[...] = jnp.zeros_like(n_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32)     # [Q, nh, dh]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    cumf = cf_ref[0, 0].astype(jnp.float32)  # [Q, nh]
+    li = li_ref[0, 0].astype(jnp.float32)
+    Q = q.shape[0]
+
+    scores = jnp.einsum("ihd,jhd->ijh", q, k)
+    decay = jnp.exp(cumf[:, None, :] - cumf[None, :, :] + li[None, :, :])
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    lmat = jnp.where((ii >= jj)[..., None], decay, 0.0)
+    y_diag = jnp.einsum("ijh,ijh,jhd->ihd", scores, lmat, v)
+    n_diag = jnp.einsum("ijh,jhd->ihd", lmat, k)
+
+    h_prev, n_prev = h_sc[...], n_sc[...]
+    iw = jnp.exp(cumf)
+    y_off = jnp.einsum("ihd,hde,ih->ihe", q, h_prev, iw)
+    n_off = jnp.einsum("ihd,hd,ih->ih", q, n_prev, iw)
+    n = jnp.einsum("ihd->ih", q * n_diag) + n_off
+    y = (y_diag + y_off) / jnp.maximum(jnp.abs(n)[..., None], 1.0)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    wgt = jnp.exp(cumf[-1:, :] - cumf + li)
+    kbar = k * wgt[..., None]
+    cd = jnp.exp(cumf[-1])
+    h_sc[...] = h_prev * cd[:, None, None] + jnp.einsum("jhd,jhe->hde", kbar, v)
+    n_sc[...] = n_prev * cd[:, None] + jnp.einsum("jhd->hd", kbar)
+
+
+def mlstm_chunk_scan(q, k, v, cumf, li, *, interpret=True):
+    """Chunked views: q,k,v [B,nc,Q,nh,dh]; cumf,li [B,nc,Q,nh]
+    -> y [B,nc,Q,nh,dh] (fp32)."""
+    B, nc, Q, nh, dh = q.shape
+    kernel = functools.partial(_kernel, n_c=nc)
+    spec5 = pl.BlockSpec((1, 1, Q, nh, dh), lambda b, c: (b, c, 0, 0, 0))
+    spec4 = pl.BlockSpec((1, 1, Q, nh), lambda b, c: (b, c, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nc),
+        in_specs=[spec5, spec5, spec5, spec4, spec4],
+        out_specs=spec5,
+        out_shape=jax.ShapeDtypeStruct((B, nc, Q, nh, dh), jnp.float32),
+        scratch_shapes=[pl_scratch((nh, dh, dh)), pl_scratch((nh, dh))],
+        interpret=interpret,
+    )(q, k, v, cumf, li)

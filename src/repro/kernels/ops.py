@@ -1,0 +1,34 @@
+"""jit'd public wrappers for all Pallas kernels (the drop-in API).
+
+On CPU (this container) the kernels run in interpret mode for correctness
+validation; on TPU set ``interpret=False`` (or REPRO_PALLAS_COMPILE=1).
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+
+from repro.kernels import ref  # noqa: F401  (oracles live here)
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mamba_scan import mamba_chunk_scan_chunked as _mamba
+from repro.kernels.mlstm import mlstm_chunk_scan as _mlstm
+from repro.kernels.moe_gmm import moe_gmm as _gmm
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+flash_attention = jax.jit(
+    partial(_flash, interpret=INTERPRET),
+    static_argnames=("causal", "window", "scale", "blk_q", "blk_k"))
+decode_attention = jax.jit(
+    partial(_decode, interpret=INTERPRET),
+    static_argnames=("scale", "blk_w"))
+rmsnorm = jax.jit(partial(_rmsnorm, interpret=INTERPRET),
+                  static_argnames=("eps", "blk"))
+moe_gmm = jax.jit(partial(_gmm, interpret=INTERPRET),
+                  static_argnames=("blk_c", "blk_f", "blk_d"))
+mamba_chunk_scan = jax.jit(partial(_mamba, interpret=INTERPRET))
+mlstm_chunk_scan = jax.jit(partial(_mlstm, interpret=INTERPRET))

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None):
+    """q [B,Sq,H,hd]; k,v [B,Sk,Hkv,hd] -> [B,Sq,H,hd_v]."""
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    scale = scale if scale is not None else hd ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    pq = jnp.arange(Sq)[:, None] + (Sk - Sq)   # align ends (q offset)
+    pk = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= pq >= pk
+    if window:
+        mask &= pq - pk < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", a.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, scale=None):
+    """q [B,H,hd]; caches [B,W,Hkv,hd]; lengths [B] (#valid slots)."""
+    B, H, hd = q.shape
+    W, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(W)[None] < lengths[:, None]
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", a.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def mamba_chunk(xbar, B_c, C_c, cum, h_prev):
+    """One SSD chunk: xbar [B,Q,nh,P]; B_c,C_c [B,Q,N]; cum [B,Q,nh]
+    (cumulative log-decay); h_prev [B,nh,P,N] -> (y [B,Q,nh,P],
+    new_state [B,nh,P,N])."""
+    Q = xbar.shape[1]
+    scores = jnp.einsum("bin,bjn->bij", C_c, B_c)
+    decay = jnp.exp(cum[:, :, None] - cum[:, None, :])       # [B,Q,Q,nh]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    lmat = jnp.where(mask[None, :, :, None], decay, 0.0)
+    y_diag = jnp.einsum("bij,bijh,bjhp->bihp", scores, lmat, xbar)
+    y_off = jnp.einsum("bin,bih,bhpn->bihp", C_c, jnp.exp(cum), h_prev)
+    rem = jnp.exp(cum[:, -1:, :] - cum)
+    state = h_prev * jnp.exp(cum[:, -1])[:, :, None, None] + \
+        jnp.einsum("bjn,bjh,bjhp->bhpn", B_c, rem, xbar)
+    return y_diag + y_off, state
+
+
+def mlstm_chunk(q, k, v, cumf, li, h_prev, n_prev):
+    """One mLSTM chunk: q,k,v [B,Q,nh,dh]; cumf,li [B,Q,nh];
+    h_prev [B,nh,dh,dh]; n_prev [B,nh,dh] -> (y, new_h, new_n)."""
+    Q = q.shape[1]
+    scores = jnp.einsum("bihd,bjhd->bijh", q, k)
+    decay = jnp.exp(cumf[:, :, None] - cumf[:, None, :] + li[:, None])
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    lmat = jnp.where(mask[None, :, :, None], decay, 0.0)
+    y_diag = jnp.einsum("bijh,bijh,bjhd->bihd", scores, lmat, v)
+    n_diag = jnp.einsum("bijh,bjhd->bihd", lmat, k)
+    iw = jnp.exp(cumf)
+    y_off = jnp.einsum("bihd,bhde,bih->bihe", q, h_prev, iw)
+    n_off = jnp.einsum("bihd,bhd,bih->bih", q, n_prev, iw)
+    n = jnp.einsum("bihd->bih", q * n_diag) + n_off
+    y = (y_diag + y_off) / jnp.maximum(jnp.abs(n)[..., None], 1.0)
+    wgt = jnp.exp(cumf[:, -1:] - cumf + li)
+    kbar = k * wgt[..., None]
+    cd = jnp.exp(cumf[:, -1])
+    new_h = h_prev * cd[:, :, None, None] + \
+        jnp.einsum("bjhd,bjhe->bhde", kbar, v)
+    new_n = n_prev * cd[..., None] + jnp.einsum("bjhd->bhd", kbar)
+    return y, new_h, new_n
+
+
+def moe_gmm(x, w):
+    """Grouped matmul: x [E,C,D] @ w [E,D,F] -> [E,C,F]."""
+    return jnp.einsum("ecd,edf->ecf", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)

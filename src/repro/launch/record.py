@@ -1,0 +1,82 @@
+"""The CODY "cloud dryrun service" CLI: produce signed recordings.
+
+    python -m repro.launch.record --arch qwen2.5-3b --smoke \
+        --kinds prefill,decode --out /tmp/recordings --key secret
+
+Recordings are keyed by (arch, kind, shape, mesh fingerprint); the client
+TEE replays them via repro.launch.replay / serving.Engine(use recordings).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_shrink
+from repro.core.recorder import record
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.sharding import rules_for
+from repro.training import steps as ST
+
+
+def recording_name(arch: str, kind: str, extra: str = "") -> str:
+    return f"{arch}_{kind}{('_' + extra) if extra else ''}.codyrec"
+
+
+def build_step(cfg, kind: str, rules, *, cache_len: int, block_k: int = 8,
+               batch: int = 1, seq: int = 32):
+    params = M.abstract_params(cfg)
+    if kind == "prefill":
+        fn = ST.make_prefill_step(cfg, rules, cache_len=cache_len)
+        batch_spec = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        return fn, (params, batch_spec), ()
+    if kind == "decode":
+        fn = ST.make_fused_decode_step(cfg, rules, k=block_k)
+        caches = jax.eval_shape(lambda: M.init_cache(cfg, batch, cache_len))
+        toks = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        return fn, (params, toks, pos, caches), (3,)
+    raise ValueError(kind)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--kinds", default="prefill,decode")
+    ap.add_argument("--out", default="/tmp/recordings")
+    ap.add_argument("--key", default="cody-demo-key")
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--block-k", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_shrink(cfg)
+    os.makedirs(args.out, exist_ok=True)
+    mesh = make_host_mesh(model=1)
+    rules = rules_for("serve", mesh.axis_names)
+    for kind in args.kinds.split(","):
+        fn, specs, donate = build_step(
+            cfg, kind, rules, cache_len=args.cache_len,
+            block_k=args.block_k, batch=args.batch, seq=args.seq)
+        rec = record(f"{args.arch}:{kind}", fn, specs, mesh=mesh,
+                     donate_argnums=donate,
+                     config_fingerprint=cfg.fingerprint(),
+                     static_meta={"kind": kind, "cache_len": args.cache_len,
+                                  "block_k": args.block_k,
+                                  "batch": args.batch, "seq": args.seq})
+        path = os.path.join(args.out, recording_name(args.arch, kind))
+        rec.save(path, args.key.encode())
+        print(f"recorded {kind}: {path} "
+              f"({len(rec.payload)/1e3:.1f} kB executable, "
+              f"{rec.manifest['record_wall_s']:.1f}s record time)")
+
+
+if __name__ == "__main__":
+    main()

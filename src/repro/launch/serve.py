@@ -1,0 +1,92 @@
+"""Serving driver: continuous batching with fused-block decode, speculative
+continuation, and (optionally) execution purely from signed recordings —
+the paper's in-TEE replay mode.
+
+    python -m repro.launch.serve --arch qwen2.5-3b --smoke --requests 8
+    python -m repro.launch.serve --from-recordings /tmp/recordings --key k
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_shrink
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.serving.engine import Engine, cache_batch_axes_for
+from repro.sharding import rules_for
+from repro.training import steps as ST
+
+
+def build_engine(cfg, *, n_slots: int, cache_len: int, block_k: int,
+                 eos_id: int, params=None, recordings_dir: str = "",
+                 key: bytes = b"", netem=None, speculate=True) -> Engine:
+    mesh = make_host_mesh(model=1)
+    rules = rules_for("serve", mesh.axis_names)
+    if recordings_dir:
+        from repro.core.replay import Replayer
+        from repro.launch.record import recording_name
+        rp = Replayer(key=key)
+        pre = rp.load(f"{recordings_dir}/{recording_name(cfg.name, 'prefill')}"
+                      .replace(cfg.name, cfg.name.replace("-smoke", "")))
+        dec = rp.load(f"{recordings_dir}/{recording_name(cfg.name, 'decode')}"
+                      .replace(cfg.name, cfg.name.replace("-smoke", "")))
+        prefill_fn = lambda p, b: rp.execute(pre, p, b)
+        decode_fn = lambda p, t, po, c: rp.execute(dec, p, t, po, c)
+    else:
+        prefill_fn = jax.jit(ST.make_prefill_step(cfg, rules, cache_len))
+        decode_fn = jax.jit(
+            ST.make_fused_decode_step(cfg, rules, k=block_k, eos_id=eos_id),
+            donate_argnums=(3,))
+    init_caches = lambda: M.init_cache(cfg, n_slots, cache_len)
+    return Engine(params, prefill_fn, decode_fn, n_slots=n_slots,
+                  cache_len=cache_len, block_k=block_k, eos_id=eos_id,
+                  init_caches_fn=init_caches,
+                  cache_batch_axes=cache_batch_axes_for(cfg), netem=netem,
+                  speculate=speculate)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--block-k", type=int, default=8)
+    ap.add_argument("--no-speculate", action="store_true")
+    ap.add_argument("--from-recordings", default="")
+    ap.add_argument("--key", default="cody-demo-key")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_shrink(cfg)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = build_engine(cfg, n_slots=args.slots, cache_len=args.cache_len,
+                       block_k=args.block_k, eos_id=2, params=params,
+                       recordings_dir=args.from_recordings,
+                       key=args.key.encode(),
+                       speculate=not args.no_speculate)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 16))
+        eng.submit(list(rng.integers(3, cfg.vocab_size, plen)), args.max_new)
+    t0 = time.time()
+    outs = eng.run()
+    dt = time.time() - t0
+    toks = sum(len(v) for v in outs.values())
+    print(f"served {len(outs)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.0f} tok/s)")
+    print("engine stats:", dict(eng.stats))
+    print("speculator:", dict(eng.spec.stats))
+    return outs, eng
+
+
+if __name__ == "__main__":
+    main()

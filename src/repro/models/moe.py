@@ -1,0 +1,113 @@
+"""Top-k routed Mixture-of-Experts with capacity-based einsum dispatch.
+
+MaxText-style dropping MoE: tokens are split into groups of ``group_size``;
+per group, each expert takes at most C = group*top_k/E*capacity tokens
+(one-hot dispatch/combine einsums — TPU-friendly, no scatters).  The
+dispatch-einsum overhead scales with C, so ``group_size`` is a tunable knob
+(hillclimbed in EXPERIMENTS.md §Perf: small groups for many-small-expert
+models like deepseek, large for mixtral).
+
+Sharding: expert weights are [E, D, F].  Two modes (cfg via logical axes):
+  * "ffn"   (mixtral, E=8  < TP): F -> tp, D -> dp   (TP inside each expert)
+  * "expert"(deepseek, E=64 >= TP): E -> tp (EP), D -> dp
+Router is tiny and replicated.  Shared experts (deepseek) are plain MLPs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec
+from repro.sharding import constrain
+
+
+def moe_schema(cfg, shard_mode: str):
+    D = cfg.d_model
+    m = cfg.moe
+    E, F = m.num_experts, m.expert_d_ff
+    e_ax = "experts" if shard_mode == "expert" else None
+    f_ax = None if shard_mode == "expert" else "expert_ffn"
+    s = {
+        "router": ParamSpec((D, E), ("norm", "experts"), D ** -0.5, "float32"),
+        "w1": ParamSpec((E, D, F), (e_ax, "expert_embed", f_ax), D ** -0.5),
+        "w3": ParamSpec((E, D, F), (e_ax, "expert_embed", f_ax), D ** -0.5),
+        "w2": ParamSpec((E, F, D), (e_ax, f_ax, "expert_embed"), F ** -0.5),
+    }
+    if m.num_shared_experts:
+        Fs = F * m.num_shared_experts
+        s["shared_w1"] = ParamSpec((D, Fs), ("fsdp", "ffn"), D ** -0.5)
+        s["shared_w3"] = ParamSpec((D, Fs), ("fsdp", "ffn"), D ** -0.5)
+        s["shared_w2"] = ParamSpec((Fs, D), ("ffn", "fsdp"), Fs ** -0.5)
+    return s
+
+
+def _capacity(group: int, top_k: int, E: int, factor: float) -> int:
+    c = int(group * top_k / E * factor)
+    return max(top_k, min(group, (c + 3) // 4 * 4))
+
+
+def apply_moe(p, x, cfg, *, rules=None, group_size: int = 0,
+              deterministic_capacity=None):
+    """x [B,S,D] -> [B,S,D]."""
+    B, S, D = x.shape
+    m = cfg.moe
+    E, K = m.num_experts, m.top_k
+    T = B * S
+    g = group_size or m.group_size or min(T, 4096)
+    g = min(g, T)
+    n_groups = T // g
+    assert n_groups * g == T, f"tokens {T} not divisible by group {g}"
+    xt = x.reshape(n_groups, g, D)
+
+    logits = jnp.einsum("ngd,de->nge", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)                     # [n,g,E]
+    top_g, top_i = jax.lax.top_k(gates, K)                      # [n,g,K]
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    C = deterministic_capacity or _capacity(g, K, E, m.capacity_factor)
+    # position of each (token, k) within its expert queue
+    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)        # [n,g,K,E]
+    pos_in_e = (jnp.cumsum(onehot.reshape(n_groups, g * K, E), 1)
+                .reshape(n_groups, g, K, E) - onehot)           # [n,g,K,E]
+    keep = (pos_in_e < C) * onehot
+    slot = jax.nn.one_hot(pos_in_e.astype(jnp.int32), C, dtype=jnp.float32)
+    dispatch = jnp.einsum("ngke,ngkec->ngec", keep, slot)       # [n,g,E,C]
+    combine = jnp.einsum("ngke,ngk,ngkec->ngec", keep, top_g, slot)
+
+    # expert compute; explicit constraints pin EP ('expert' mode: tokens
+    # all-to-all to their experts) or per-expert TP ('ffn' mode: token
+    # groups STAY dp-sharded — an unsharded n dim would all-gather the
+    # 32 GB dispatch tensors, measured as mixtral's 260 s/step bottleneck,
+    # EXPERIMENTS.md §Perf iter 5).
+    expert_mode = p["w1"].shape[0] >= 16
+    cst = lambda t, ax: constrain(t, ax, rules) if rules is not None else t
+    if expert_mode:   # EP: shard experts, replicate groups (a2a dispatch)
+        xe_ax, h_ax = (None, "experts", None, None), \
+            (None, "experts", None, None)
+    else:             # per-expert TP: shard groups (dp) + expert ffn (tp)
+        xe_ax, h_ax = ("batch", None, None, None), \
+            ("batch", None, "expert_ffn", None)
+    xe = jnp.einsum("ngec,ngd->nedc", dispatch.astype(x.dtype), xt)  # [n,E,D,C]
+    xe = cst(xe, xe_ax)
+    h = jnp.einsum("nedc,edf->nefc", xe, p["w1"])
+    h = jax.nn.silu(h) * jnp.einsum("nedc,edf->nefc", xe, p["w3"])
+    h = cst(h, h_ax)
+    ye = jnp.einsum("nefc,efd->nedc", h, p["w2"])                # [n,E,D,C]
+    ye = cst(ye, xe_ax)
+    y = jnp.einsum("nedc,ngec->ngd", ye, combine.astype(x.dtype))
+
+    if "shared_w1" in p:
+        hs = jax.nn.silu(xt @ p["shared_w1"]) * (xt @ p["shared_w3"])
+        hs = cst(hs, (None, None, "ffn"))
+        y = y + hs @ p["shared_w2"]
+
+    aux = _load_balance_loss(gates, top_i, E)
+    return y.reshape(B, S, D), aux
+
+
+def _load_balance_loss(gates, top_i, E):
+    """Switch-style auxiliary load-balancing loss (mean over groups)."""
+    me = jnp.mean(gates, axis=1)                                 # [n,E]
+    ce = jnp.mean(jax.nn.one_hot(top_i[..., 0], E, dtype=jnp.float32), axis=1)
+    return E * jnp.mean(jnp.sum(me * ce, -1))

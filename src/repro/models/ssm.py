@@ -1,0 +1,164 @@
+"""Mamba2 (SSD) blocks — chunked parallel train/prefill + recurrent decode.
+
+The inter-chunk recurrence uses ``jax.lax.associative_scan`` (log-depth,
+fully unrolled) rather than ``lax.scan`` so the HLO roofline analyzer sees
+its true cost without trip-count correction.  Projections are separate
+weight matrices (z/x/B/C/dt) so TP sharding never slices a sharded dim.
+The Pallas kernel (repro/kernels/mamba_scan.py) mirrors the intra-chunk
+math.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, apply_norm, norm_schema
+from repro.sharding import constrain
+
+
+def pick_chunk(S: int, chunk: int) -> int:
+    """Largest divisor of S that is <= chunk (SSD chunk must divide S)."""
+    q = min(chunk, S)
+    while S % q:
+        q -= 1
+    return q
+
+
+def mamba2_dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = s.num_heads or d_in // s.head_dim
+    return d_in, nh, s.head_dim, s.state_dim
+
+
+def mamba2_schema(cfg):
+    D = cfg.d_model
+    d_in, nh, P, N = mamba2_dims(cfg)
+    K = cfg.ssm.conv_width
+    return {
+        "w_z": ParamSpec((D, d_in), ("fsdp", "ssm_inner"), D ** -0.5),
+        "w_x": ParamSpec((D, d_in), ("fsdp", "ssm_inner"), D ** -0.5),
+        "w_B": ParamSpec((D, N), ("fsdp", None), D ** -0.5),
+        "w_C": ParamSpec((D, N), ("fsdp", None), D ** -0.5),
+        "w_dt": ParamSpec((D, nh), ("fsdp", "ssm_heads"), D ** -0.5),
+        "conv_x": ParamSpec((K, d_in), ("conv", "ssm_inner"), 0.1),
+        "conv_b": ParamSpec((K, 2 * N), ("conv", None), 0.1),
+        "bias_x": ParamSpec((d_in,), ("ssm_inner",), 0.0),
+        "bias_bc": ParamSpec((2 * N,), (None,), 0.0),
+        "A_log": ParamSpec((nh,), ("ssm_heads",), 0.0, "float32"),
+        "D_skip": ParamSpec((nh,), ("ssm_heads",), -1.0, "float32"),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), 0.02, "float32"),
+        "norm": norm_schema(d_in),
+        "out_proj": ParamSpec((d_in, D), ("ssm_inner", "fsdp"), d_in ** -0.5),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along S.  x [B,S,C]; w [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _proj_all(p, x, cfg, rules=None):
+    """-> z [..,d_in], xs raw [..,d_in], BC raw [..,2N], dt [..,nh]."""
+    z = x @ p["w_z"]
+    xs = x @ p["w_x"]
+    BC = jnp.concatenate([x @ p["w_B"], x @ p["w_C"]], -1)
+    dt = x @ p["w_dt"]
+    if rules is not None and x.ndim == 3:
+        z = constrain(z, ("batch", None, "ssm_inner"), rules)
+        xs = constrain(xs, ("batch", None, "ssm_inner"), rules)
+    return z, xs, BC, dt
+
+
+def mamba2_forward(p, x, cfg, rules=None):
+    """x [B,S,D] -> (y [B,S,D], final state) via chunked SSD."""
+    B, S, D = x.shape
+    d_in, nh, P, N = mamba2_dims(cfg)
+    Q = pick_chunk(S, cfg.ssm.chunk)
+    nc = S // Q
+
+    z, xs_raw, BC_raw, dt = _proj_all(p, x, cfg, rules)
+    conv_tail = {"x": xs_raw[:, -(cfg.ssm.conv_width - 1):],
+                 "bc": BC_raw[:, -(cfg.ssm.conv_width - 1):]}
+    xs = _causal_conv(xs_raw, p["conv_x"], p["bias_x"]).reshape(B, S, nh, P)
+    BC = _causal_conv(BC_raw, p["conv_b"], p["bias_bc"])
+    Bm, Cm = BC[..., :N], BC[..., N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,nh]
+    A = -jnp.exp(p["A_log"])                            # [nh]
+    da = dt * A                                         # log-decay [B,S,nh]
+
+    # chunk views
+    c = lambda t: t.reshape(B, nc, Q, *t.shape[2:])
+    xs_c, B_c, C_c, da_c, dt_c = c(xs), c(Bm), c(Cm), c(da), c(dt)
+    cum = jnp.cumsum(da_c, axis=2)                      # [B,nc,Q,nh]
+
+    xbar = (xs_c * dt_c[..., None]).astype(jnp.float32)
+    # ---- intra-chunk (diagonal) ----
+    scores = jnp.einsum("bcin,bcjn->bcij", C_c.astype(jnp.float32),
+                        B_c.astype(jnp.float32))        # [B,nc,Q,Q]
+    decay = jnp.exp(cum[:, :, :, None] - cum[:, :, None, :])  # [B,nc,Q,Q,nh]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    lmat = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, lmat, xbar)
+
+    # ---- chunk states ----
+    rem = jnp.exp(cum[:, :, -1:, :] - cum)              # decay to chunk end
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", B_c.astype(jnp.float32),
+                        rem, xbar)                       # [B,nc,nh,P,N]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # [B,nc,nh]
+
+    # ---- inter-chunk associative scan:  H_c = H_{c-1} * d_c + S_c ----
+    def comb(a, b):
+        d1, s1 = a
+        d2, s2 = b
+        return d1 * d2, s1 * d2[..., None, None] + s2
+    dsc, ssc = jax.lax.associative_scan(comb, (chunk_decay, states), axis=1)
+    # H entering chunk c is the scanned state of chunk c-1
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(ssc[:, :1]), ssc[:, :-1]], axis=1)  # [B,nc,nh,P,N]
+
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", C_c.astype(jnp.float32),
+                       jnp.exp(cum), h_prev)
+    y = (y_diag + y_off).reshape(B, S, nh, P)
+    y = y + p["D_skip"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = apply_norm(p["norm"], y)
+    return y @ p["out_proj"], {"ssm": ssc[:, -1], "conv": conv_tail}
+
+
+def mamba2_init_state(cfg, batch, dtype):
+    d_in, nh, P, N = mamba2_dims(cfg)
+    K = cfg.ssm.conv_width
+    return {
+        "ssm": jnp.zeros((batch, nh, P, N), jnp.float32),
+        "conv": {"x": jnp.zeros((batch, K - 1, d_in), dtype),
+                 "bc": jnp.zeros((batch, K - 1, 2 * N), dtype)},
+    }
+
+
+def mamba2_decode(p, x, cfg, state):
+    """x [B,1,D]; recurrent single-token update."""
+    B = x.shape[0]
+    d_in, nh, P, N = mamba2_dims(cfg)
+    z, xs_raw, BC_raw, dt = _proj_all(p, x[:, 0], cfg)
+    win_x = jnp.concatenate([state["conv"]["x"], xs_raw[:, None]], 1)
+    xs = jax.nn.silu((win_x * p["conv_x"][None]).sum(1) + p["bias_x"])
+    win_bc = jnp.concatenate([state["conv"]["bc"], BC_raw[:, None]], 1)
+    BC = jax.nn.silu((win_bc * p["conv_b"][None]).sum(1) + p["bias_bc"])
+    new_conv = {"x": win_x[:, 1:], "bc": win_bc[:, 1:]}
+    xs = xs.reshape(B, nh, P)
+    Bm, Cm = BC[..., :N], BC[..., N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,nh]
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))                        # [B,nh]
+    xbar = (xs * dt[..., None]).astype(jnp.float32)
+    h = state["ssm"] * a[..., None, None] + jnp.einsum(
+        "bn,bhp->bhpn", Bm.astype(jnp.float32), xbar)
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h)
+    y = y + p["D_skip"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, d_in).astype(x.dtype) * jax.nn.silu(z)
+    y = apply_norm(p["norm"], y)
+    return (y @ p["out_proj"])[:, None], {"ssm": h, "conv": new_conv}

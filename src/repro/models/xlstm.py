@@ -1,0 +1,221 @@
+"""xLSTM blocks: mLSTM (chunkwise-parallel matrix memory) and sLSTM
+(scalar memory, exponential gating with stabilizer state, lax.scan).
+
+The mLSTM uses a GLA-style chunkwise formulation (per-head scalar forget
+decay in log space + matrix state), which matches the recurrent decode rule
+exactly; the Pallas kernel in repro/kernels/mlstm.py mirrors the intra-chunk
+math.  sLSTM is inherently sequential (nonlinear recurrence) -> lax.scan;
+its HLO while-loop cost is trip-count-corrected by the roofline analyzer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, apply_norm, norm_schema
+from repro.sharding import constrain
+
+
+def mlstm_dims(cfg):
+    d_in = int(cfg.d_model * cfg.xlstm.proj_factor_m)
+    nh = cfg.num_heads
+    return d_in, nh, d_in // nh
+
+
+def mlstm_schema(cfg):
+    D = cfg.d_model
+    d_in, nh, dh = mlstm_dims(cfg)
+    return {
+        "w_up": ParamSpec((D, 2 * d_in), ("fsdp", "ssm_inner"), D ** -0.5),
+        "wq": ParamSpec((d_in, d_in), ("ssm_inner", None), d_in ** -0.5),
+        "wk": ParamSpec((d_in, d_in), ("ssm_inner", None), d_in ** -0.5),
+        "wv": ParamSpec((d_in, d_in), ("ssm_inner", None), d_in ** -0.5),
+        "w_if": ParamSpec((D, 2 * nh), ("fsdp", "ssm_heads"), D ** -0.5),
+        "b_if": ParamSpec((2 * nh,), ("ssm_heads",), 0.0, "float32"),
+        "norm": norm_schema(d_in),
+        "w_down": ParamSpec((d_in, D), ("ssm_inner", "fsdp"), d_in ** -0.5),
+    }
+
+
+def _mlstm_qkvgates(p, x, cfg):
+    d_in, nh, dh = mlstm_dims(cfg)
+    up = x @ p["w_up"]
+    z, h_in = up[..., :d_in], up[..., d_in:]
+    shp = x.shape[:-1]
+    q = (h_in @ p["wq"]).reshape(*shp, nh, dh) * dh ** -0.5
+    k = (h_in @ p["wk"]).reshape(*shp, nh, dh) * dh ** -0.5
+    v = (h_in @ p["wv"]).reshape(*shp, nh, dh)
+    gates = (x @ p["w_if"]).astype(jnp.float32) + p["b_if"]
+    logf = jax.nn.log_sigmoid(gates[..., :nh])       # per-head forget (log)
+    logi = gates[..., nh:]                           # input gate (log-space)
+    return z, q, k, v, logf, logi
+
+
+def mlstm_forward(p, x, cfg, rules=None):
+    """Chunkwise-parallel mLSTM. x [B,S,D] -> [B,S,D]."""
+    B, S, D = x.shape
+    d_in, nh, dh = mlstm_dims(cfg)
+    from repro.models.ssm import pick_chunk
+    Q = pick_chunk(S, cfg.xlstm.chunk)
+    nc = S // Q
+    z, q, k, v, logf, logi = _mlstm_qkvgates(p, x, cfg)
+    if rules is not None:
+        q, k, v = (constrain(t, ("batch", None, None, None), rules)
+                   for t in (q, k, v))
+
+    c = lambda t: t.reshape(B, nc, Q, *t.shape[2:])
+    qc, kc, vc, lf, li = c(q), c(k), c(v), c(logf), c(logi)
+    li = jnp.minimum(li, 8.0)                        # bounded exp input gate
+    cumf = jnp.cumsum(lf, axis=2)                    # [B,nc,Q,nh]  (<= 0)
+    # all exponents below are <= li (cumf decreasing), so no stabilizer state
+    wgt = jnp.exp(cumf[:, :, -1:] - cumf + li)       # decay to chunk END
+    kbar = kc.astype(jnp.float32) * wgt[..., None]
+
+    # intra-chunk
+    scores = jnp.einsum("bcihd,bcjhd->bcijh", qc.astype(jnp.float32),
+                        kc.astype(jnp.float32))
+    decay = jnp.exp(cumf[:, :, :, None] - cumf[:, :, None, :]
+                    + li[:, :, None, :])
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    lmat = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    y_diag = jnp.einsum("bcijh,bcijh,bcjhd->bcihd", scores, lmat,
+                        vc.astype(jnp.float32))
+    n_diag = jnp.einsum("bcijh,bcjhd->bcihd", lmat, kc.astype(jnp.float32))
+
+    # chunk states  Ck [B,nc,nh,dk,dv], Nk [B,nc,nh,dk]
+    states = jnp.einsum("bcjhd,bcjhe->bchde", kbar, vc.astype(jnp.float32))
+    nstates = jnp.einsum("bcjhd->bchd", kbar)
+    cdecay = jnp.exp(cumf[:, :, -1])                 # [B,nc,nh]
+
+    def comb(a, b):
+        d1, s1, n1 = a
+        d2, s2, n2 = b
+        return (d1 * d2, s1 * d2[..., None, None] + s2, n1 * d2[..., None] + n2)
+    dsc, ssc, nsc = jax.lax.associative_scan(
+        comb, (cdecay, states, nstates), axis=1)
+    h_prev = jnp.concatenate([jnp.zeros_like(ssc[:, :1]), ssc[:, :-1]], 1)
+    n_prev = jnp.concatenate([jnp.zeros_like(nsc[:, :1]), nsc[:, :-1]], 1)
+
+    inter_w = jnp.exp(cumf)                          # decay from chunk start
+    y_off = jnp.einsum("bcihd,bchde,bcih->bcihe", qc.astype(jnp.float32),
+                       h_prev, inter_w)
+    n_off = jnp.einsum("bcihd,bchd,bcih->bcih", qc.astype(jnp.float32),
+                       n_prev, inter_w)
+    y = y_diag + y_off
+    n = jnp.einsum("bcihd->bcih", qc.astype(jnp.float32) * n_diag) + n_off
+    y = y / jnp.maximum(jnp.abs(n)[..., None], 1.0)
+    y = y.reshape(B, S, d_in).astype(x.dtype) * jax.nn.silu(z)
+    y = apply_norm(p["norm"], y)
+    return y @ p["w_down"], (ssc[:, -1], nsc[:, -1])
+
+
+def mlstm_init_state(cfg, batch):
+    d_in, nh, dh = mlstm_dims(cfg)
+    return {"C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, nh, dh), jnp.float32)}
+
+
+def mlstm_decode(p, x, cfg, state):
+    """x [B,1,D] recurrent step."""
+    B = x.shape[0]
+    d_in, nh, dh = mlstm_dims(cfg)
+    z, q, k, v, logf, logi = _mlstm_qkvgates(p, x[:, 0], cfg)
+    f = jnp.exp(logf)                                # [B,nh]
+    i = jnp.exp(jnp.minimum(logi, 8.0))
+    C = state["C"] * f[..., None, None] + i[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
+    n = state["n"] * f[..., None] + i[..., None] * k.astype(jnp.float32)
+    y = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), C)
+    den = jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n)
+    y = y / jnp.maximum(jnp.abs(den)[..., None], 1.0)
+    y = y.reshape(B, d_in).astype(x.dtype) * jax.nn.silu(z)
+    y = apply_norm(p["norm"], y)
+    return (y @ p["w_down"])[:, None], {"C": C, "n": n}
+
+
+# ------------------------------------------------------------------ sLSTM --
+def slstm_schema(cfg):
+    D = cfg.d_model
+    nh = cfg.num_heads
+    dh = D // nh
+    F = int(D * cfg.xlstm.proj_factor_s)
+    return {
+        "w_gates": ParamSpec((D, 4 * D), ("fsdp", "ssm_inner"), D ** -0.5),
+        "r_gates": ParamSpec((4, nh, dh, dh), (None, "ssm_heads", None, None),
+                             dh ** -0.5),
+        "b_gates": ParamSpec((4 * D,), ("ssm_inner",), 0.0, "float32"),
+        "norm": norm_schema(D),
+        "ffn_w1": ParamSpec((D, F), ("fsdp", "ffn"), D ** -0.5),
+        "ffn_w3": ParamSpec((D, F), ("fsdp", "ffn"), D ** -0.5),
+        "ffn_w2": ParamSpec((F, D), ("ffn", "fsdp"), F ** -0.5),
+    }
+
+
+def _slstm_cell(p, xg, carry, cfg):
+    """xg [B,4D] precomputed input gates; carry = (h, c, n, m) each [B,nh,dh]."""
+    nh = cfg.num_heads
+    dh = cfg.d_model // nh
+    B = xg.shape[0]
+    h, c, n, m = carry
+    rec = jnp.einsum("bhd,ghde->bghe", h, p["r_gates"].astype(jnp.float32))
+    g = xg.reshape(B, 4, nh, dh).astype(jnp.float32) + rec
+    zt = jnp.tanh(g[:, 0])
+    it = g[:, 1]                                     # log-space input gate
+    ft = g[:, 2]                                     # log-space forget gate
+    ot = jax.nn.sigmoid(g[:, 3])
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c = f_p * c + i_p * zt
+    n = f_p * n + i_p
+    h_new = ot * c / jnp.maximum(n, 1.0)
+    return h_new, c, n, m_new
+
+
+def slstm_forward(p, x, cfg, rules=None):
+    """x [B,S,D] -> [B,S,D] via lax.scan over time.
+
+    ``xg`` is pinned to batch-only sharding BEFORE the time scan: a
+    seq-sharded xg would force a per-timestep all-gather inside the loop
+    (measured 37 TB of collectives on xlstm train_4k — EXPERIMENTS.md
+    §Perf).  One gather outside the loop instead."""
+    B, S, D = x.shape
+    nh, dh = cfg.num_heads, D // cfg.num_heads
+    xg = (x @ p["w_gates"]).astype(jnp.float32) + p["b_gates"]
+    xg = constrain(xg, ("batch", None, None), rules) if rules else xg
+    init = tuple(jnp.zeros((B, nh, dh), jnp.float32) for _ in range(4))
+
+    def body(carry, xg_t):
+        new = _slstm_cell(p, xg_t, carry, cfg)
+        if rules is not None:
+            # pin the recurrent state to batch-only sharding: downstream
+            # (FFN tp) propagation would otherwise shard dh over 'model'
+            # and force a per-timestep all-gather (measured 3.9 TB/step on
+            # xlstm train_4k — EXPERIMENTS.md §Perf iter 2)
+            new = tuple(constrain(t, ("batch", None, None), rules)
+                        for t in new)
+        return new, new[0]
+    carry, hs = jax.lax.scan(body, init, xg.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    y = constrain(y, ("batch", None, None), rules) if rules else y
+    y = apply_norm(p["norm"], y)
+    y = jax.nn.silu(y @ p["ffn_w1"]) * (y @ p["ffn_w3"])
+    return y @ p["ffn_w2"], carry
+
+
+def slstm_init_state(cfg, batch):
+    nh, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z}
+
+
+def slstm_decode(p, x, cfg, state):
+    xg = (x[:, 0] @ p["w_gates"]).astype(jnp.float32) + p["b_gates"]
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    h, c, n, m = _slstm_cell(p, xg, carry, cfg)
+    B, D = x.shape[0], x.shape[-1]
+    y = h.reshape(B, D).astype(x.dtype)
+    y = apply_norm(p["norm"], y)
+    y = jax.nn.silu(y @ p["ffn_w1"]) * (y @ p["ffn_w3"])
+    return (y @ p["ffn_w2"])[:, None], {"h": h, "c": c, "n": n, "m": m}

@@ -1,0 +1,142 @@
+"""Fault-tolerant checkpointing: content-addressed chunks + metastate
+manifest (the paper's metastate/program-data split applied to persistence).
+
+* Program data (weights, moments) -> write-once chunks keyed by content
+  hash: unchanged tensors across steps cost nothing (dedup), partial writes
+  are harmless (manifest commits atomically last).
+* Metastate (step, RNG, data cursor, slot tables) -> inline in the manifest
+  via DeltaSync-compatible packing.
+* Restore reshards to ANY mesh: chunks hold logical arrays; elastic
+  restart = load + device_put with the new mesh's shardings (recordings are
+  re-made per mesh fingerprint — paper §2.4's exact-hardware rule).
+* ``async_save`` runs serialization off-thread; ``save`` is atomic via
+  tempfile + rename.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import tempfile
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core import metasync
+
+
+def _chunk_bytes(arr: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    np.save(buf, arr, allow_pickle=False)
+    return buf.getvalue()
+
+
+class CheckpointStore:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(os.path.join(root, "chunks"), exist_ok=True)
+        self._lock = threading.Lock()
+        self._pending: Optional[threading.Thread] = None
+        self.stats = {"chunks_written": 0, "chunks_deduped": 0,
+                      "bytes_written": 0}
+
+    # ----------------------------------------------------------- writing --
+    def _write_chunk(self, arr: np.ndarray) -> str:
+        blob = _chunk_bytes(arr)
+        h = hashlib.sha256(blob).hexdigest()[:32]
+        path = os.path.join(self.root, "chunks", h + ".npy")
+        if not os.path.exists(path):
+            with tempfile.NamedTemporaryFile(
+                    dir=os.path.dirname(path), delete=False) as f:
+                f.write(blob)
+            os.replace(f.name, path)
+            self.stats["chunks_written"] += 1
+            self.stats["bytes_written"] += len(blob)
+        else:
+            self.stats["chunks_deduped"] += 1
+        return h
+
+    def save(self, state, step: int, extra_meta: Optional[Dict] = None):
+        """Blocking atomic save."""
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+        meta, data = metasync.split(host_state)
+        manifest = {
+            "step": step,
+            "meta": {p: {"data": _chunk_bytes(np.asarray(v)).hex()}
+                     for p, v in meta.items()},
+            "data": {},
+            "extra": extra_meta or {},
+        }
+        for path, arr in data.items():
+            h = self._write_chunk(np.asarray(arr))
+            manifest["data"][path] = {
+                "hash": h, "shape": list(np.asarray(arr).shape),
+                "dtype": str(np.asarray(arr).dtype)}
+        mpath = os.path.join(self.root, f"manifest_{step:08d}.json")
+        with tempfile.NamedTemporaryFile("w", dir=self.root,
+                                         delete=False) as f:
+            json.dump(manifest, f)
+        os.replace(f.name, mpath)   # atomic commit point
+        return mpath
+
+    def async_save(self, state, step: int, extra_meta=None):
+        """Snapshot on the caller thread (cheap host copy), serialize on a
+        background thread — training continues immediately."""
+        host_state = jax.tree.map(lambda x: np.asarray(x).copy(), state)
+        self.wait()
+        t = threading.Thread(target=self.save,
+                             args=(host_state, step, extra_meta))
+        t.start()
+        self._pending = t
+        return t
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    # ----------------------------------------------------------- reading --
+    def latest_step(self) -> Optional[int]:
+        steps = [int(f[len("manifest_"):-5]) for f in os.listdir(self.root)
+                 if f.startswith("manifest_")]
+        return max(steps) if steps else None
+
+    def restore(self, state_like, step: Optional[int] = None):
+        """Rebuild the state pytree (numpy leaves) from a manifest.
+
+        ``state_like`` provides the pytree structure (abstract or concrete).
+        Resharding to a new mesh is the caller's ``jax.device_put`` with the
+        new shardings — chunks are logical arrays, so any mesh works."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoint manifests in " + self.root)
+        with open(os.path.join(self.root, f"manifest_{step:08d}.json")) as f:
+            manifest = json.load(f)
+        meta = {p: np.load(io.BytesIO(bytes.fromhex(d["data"])),
+                           allow_pickle=False)
+                for p, d in manifest["meta"].items()}
+        data = {}
+        for path, d in manifest["data"].items():
+            with open(os.path.join(self.root, "chunks",
+                                   d["hash"] + ".npy"), "rb") as f:
+                data[path] = np.load(f, allow_pickle=False)
+        return metasync.merge(state_like, meta, data), manifest
+
+    def gc(self, keep_last: int = 2):
+        steps = sorted([int(f[len("manifest_"):-5])
+                        for f in os.listdir(self.root)
+                        if f.startswith("manifest_")])
+        keep = set(steps[-keep_last:])
+        live = set()
+        for s in keep:
+            with open(os.path.join(self.root, f"manifest_{s:08d}.json")) as f:
+                live |= {d["hash"] for d in json.load(f)["data"].values()}
+        for s in steps:
+            if s not in keep:
+                os.remove(os.path.join(self.root, f"manifest_{s:08d}.json"))
+        for c in os.listdir(os.path.join(self.root, "chunks")):
+            if c[:-4] not in live:
+                os.remove(os.path.join(self.root, "chunks", c))

@@ -1,0 +1,60 @@
+"""Slot-based KV cache management for continuous batching.
+
+The allocation table (slot -> request, lengths, positions) is pure
+METASTATE (repro.core.metasync): it is what crosses hosts, what rollback
+restores, and what checkpoints inline — KV pages themselves never travel
+(paper §5).  Stale cache rows beyond a sequence's committed position are
+harmless by construction (decode masks on ``pos``), which is what makes
+metastate-only rollback sound.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SlotTable:
+    """Metastate: the engine's 'page table'."""
+    n_slots: int
+
+    def __post_init__(self):
+        self.request_id = np.full(self.n_slots, -1, np.int64)
+        self.pos = np.zeros(self.n_slots, np.int32)        # next write slot
+        self.committed_pos = np.zeros(self.n_slots, np.int32)
+        self.done = np.ones(self.n_slots, bool)            # free == done
+
+    # -- metastate dict for metasync / checkpoints --
+    def meta(self) -> Dict[str, np.ndarray]:
+        return {"request_id": self.request_id.copy(),
+                "pos": self.pos.copy(),
+                "committed_pos": self.committed_pos.copy(),
+                "done": self.done.copy()}
+
+    def restore(self, meta: Dict[str, np.ndarray]):
+        self.request_id = np.array(meta["request_id"])
+        self.pos = np.array(meta["pos"])
+        self.committed_pos = np.array(meta["committed_pos"])
+        self.done = np.array(meta["done"])
+
+    def free_slots(self) -> List[int]:
+        return [i for i in range(self.n_slots) if self.done[i]]
+
+    def alloc(self, request_id: int, prompt_len: int) -> Optional[int]:
+        free = self.free_slots()
+        if not free:
+            return None
+        s = free[0]
+        self.request_id[s] = request_id
+        self.pos[s] = prompt_len
+        self.committed_pos[s] = prompt_len
+        self.done[s] = False
+        return s
+
+    def release(self, slot: int):
+        self.request_id[slot] = -1
+        self.done[slot] = True
+        self.pos[slot] = 0
+        self.committed_pos[slot] = 0

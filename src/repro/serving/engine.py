@@ -1,0 +1,259 @@
+"""Serving engine: continuous batching + the paper's three optimizations.
+
+Decode runs in fused k-step blocks (ONE host dispatch per k tokens — the
+paper's register-access deferral + §4.3 polling-loop offload: the EOS
+"poll" lives device-side inside the block).  The host pipeline goes further
+with *speculative continuation* (§4.2): it dispatches the next block
+WITHOUT waiting for the previous block's done-mask readback when the
+commit history is k-confident that nothing finished; validation happens at
+the commit frontier, and a mispredict rolls back pure metastate (positions,
+token tails) — the paper's replay-based recovery, cheap because KV rows
+beyond the committed position are inert.
+
+The engine can execute through live jitted functions OR through signed
+recordings via the Replayer (``use_replayer=True``) — the latter is the
+paper's in-TEE mode and imports no model code at decode time.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.deferral import CommitQueue, Op
+from repro.core.speculation import HistorySpeculator
+from repro.serving.cache import SlotTable
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    committed: int = 0            # validated prefix of `generated`
+    done: bool = False
+    submit_t: float = 0.0
+    finish_t: float = 0.0
+
+
+class Engine:
+    """prefill_fn(params, batch) -> ({"next_tokens", ...}, caches_for_slot)
+    fused_decode_fn(params, tokens, pos, caches) -> ({"tokens":[B,k],
+    "pos", "done"}, caches).  Both may be live jits or Replayer handles.
+    """
+
+    def __init__(self, params, prefill_fn, fused_decode_fn, *, n_slots: int,
+                 cache_len: int, block_k: int, eos_id: int = 2,
+                 init_caches_fn=None, cache_batch_axes=None, netem=None,
+                 spec_k: int = 3, speculate: bool = True):
+        self.params = params
+        self.prefill_fn = prefill_fn
+        self.fused_decode_fn = fused_decode_fn
+        self.block_k = block_k
+        self.eos_id = eos_id
+        self.netem = netem
+        self.slots = SlotTable(n_slots)
+        self.caches = init_caches_fn() if init_caches_fn else None
+        # per-leaf position of the batch axis (leading dims may be stage
+        # stacks); provided by the launcher from model.cache_axes
+        self._batch_axes = cache_batch_axes
+        self.requests: Dict[int, Request] = {}
+        self.pending: collections.deque = collections.deque()
+        self.queue = CommitQueue(self._channel, netem=netem, name="decode")
+        self.spec = HistorySpeculator(k=spec_k)
+        self.speculate = speculate
+        self.inflight: List[dict] = []     # speculative (unvalidated) blocks
+        self.stats = collections.Counter()
+        self._slot_tokens = np.zeros(n_slots, np.int32)
+
+    # ------------------------------------------------------------ channel --
+    def _channel(self, op: Op):
+        """Device-side execution of one interaction (the 'client GPU')."""
+        if op.kind == "write":      # dispatch a fused decode block
+            self._dispatch_block()
+            return None
+        if op.kind == "read":       # read back done mask + new tokens
+            return self._last_block_result
+        return None
+
+    def _dispatch_block(self):
+        toks = jnp.asarray(self._slot_tokens)
+        pos = jnp.asarray(self.slots.pos)
+        out, self.caches = self.fused_decode_fn(
+            self.params, toks, pos, self.caches)
+        tokens = np.asarray(out["tokens"])          # [B, k]
+        done = np.asarray(out["done"])
+        newpos = np.asarray(out["pos"])
+        self._last_block_result = (tokens.tobytes(), done.tobytes(),
+                                   newpos.tobytes())
+        self._last_block_arrays = (tokens, done, newpos)
+        self.stats["blocks_dispatched"] += 1
+
+    # ------------------------------------------------------------- public --
+    def submit(self, prompt: List[int], max_new: int) -> int:
+        rid = len(self.requests)
+        self.requests[rid] = Request(rid, list(prompt), max_new,
+                                     submit_t=time.time())
+        self.pending.append(rid)
+        return rid
+
+    def _admit(self):
+        while self.pending and self.slots.free_slots():
+            rid = self.pending[0]
+            req = self.requests[rid]
+            slot = self.slots.alloc(rid, len(req.prompt))
+            if slot is None:
+                return
+            self.pending.popleft()
+            self._prefill_into_slot(req, slot)
+            self.stats["admitted"] += 1
+
+    def _prefill_into_slot(self, req: Request, slot: int):
+        batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
+        out, caches = self.prefill_fn(self.params, batch)
+        first = int(np.asarray(out["next_tokens"])[0])
+        self._slot_tokens[slot] = first
+        req.generated.append(first)
+        # copy the single-sequence caches into this slot's row
+        flat_c, td = jax.tree.flatten(self.caches)
+        flat_n = jax.tree.leaves(caches)
+        axes = self._batch_axes or [0] * len(flat_c)
+        out_leaves = []
+        for c, n, ax in zip(flat_c, flat_n, axes):
+            row = jnp.take(n, 0, axis=ax)   # shapes align: same cache_len
+            out_leaves.append(
+                c.at[(slice(None),) * ax + (slot,)].set(row.astype(c.dtype)))
+        self.caches = jax.tree.unflatten(td, out_leaves)
+        if self.netem is not None:
+            self.netem.round_trip()     # prefill is a synchronous commit
+
+    # The decode pipeline: write(dispatch) + read(done mask) per block.
+    def step_block(self):
+        """One fused block for all active slots; returns #active."""
+        self._admit()
+        active = [i for i in range(self.slots.n_slots)
+                  if not self.slots.done[i]]
+        if not active:
+            return 0
+        snapshot = {"slots": self.slots.meta(),
+                    "gen": {r.rid: list(r.generated)
+                            for r in self.requests.values()},
+                    "tok": self._slot_tokens.copy()}
+        self.queue.write("decode.block")
+        sym = self.queue.read("decode.done_mask")
+        ops = list(self.queue.queue)
+        pred = self.spec.predict(ops) if self.speculate else None
+        if pred is not None:
+            # speculative continuation: don't block on the readback
+            self.queue.queue = []
+            self.queue.execute_ops(ops)     # device runs; actual kept aside
+            actual = self._last_block_arrays
+            if self.netem is not None:
+                self.netem.async_trip()
+            self.inflight.append({"snapshot": snapshot, "ops": ops,
+                                  "actual": actual, "pred": pred})
+            self._apply_block(actual, speculative=True)
+            self.stats["spec_blocks"] += 1
+        else:
+            self.queue.commit()
+            actual = self._last_block_arrays
+            self._apply_block(actual, speculative=False)
+            outcome = ("all_running",) if not bool(actual[1].any()) \
+                else ("some_done",)
+            self.spec.record(ops, outcome)
+            self._retire(actual)
+            self.stats["sync_blocks"] += 1
+        return len(active)
+
+    def validate(self):
+        """Commit frontier: validate speculative blocks in order (§4.2)."""
+        while self.inflight:
+            blk = self.inflight.pop(0)
+            actual = blk["actual"]
+            outcome = ("all_running",) if not bool(actual[1].any()) \
+                else ("some_done",)
+            self.spec.record(blk["ops"], outcome)
+            if blk["pred"] != outcome:
+                # mispredict: some sequence finished inside a speculative
+                # block -> roll back metastate to the snapshot, re-apply the
+                # block with EOS honored (replay from the log), drop the
+                # rest of the speculative pipeline.
+                self.stats["mispredicts"] += 1
+                self.slots.restore(blk["snapshot"]["slots"])
+                for rid, gen in blk["snapshot"]["gen"].items():
+                    self.requests[rid].generated = list(gen)
+                self._slot_tokens = blk["snapshot"]["tok"].copy()
+                self._apply_block(actual, speculative=False)
+                self._retire(actual)
+                self.inflight.clear()
+                return False
+            self._retire(actual)
+            self.stats["validated_blocks"] += 1
+        # frontier clean: commit generated tails
+        for req in self.requests.values():
+            req.committed = len(req.generated)
+        self.slots.committed_pos[:] = self.slots.pos
+        return True
+
+    # ------------------------------------------------------------ helpers --
+    def _apply_block(self, actual, speculative: bool):
+        tokens, done, newpos = actual
+        for i in range(self.slots.n_slots):
+            if self.slots.done[i]:
+                continue
+            rid = int(self.slots.request_id[i])
+            req = self.requests[rid]
+            new = [int(t) for t in tokens[i]]
+            if not speculative and bool(done[i]):
+                # truncate at EOS
+                cut = next((j + 1 for j, t in enumerate(new)
+                            if t == self.eos_id), len(new))
+                new = new[:cut]
+            req.generated.extend(new)
+            self._slot_tokens[i] = new[-1] if new else self._slot_tokens[i]
+        self.slots.pos[:] = np.asarray(newpos)[:self.slots.n_slots]
+
+    def _retire(self, actual):
+        _tokens, done, _ = actual
+        for i in range(self.slots.n_slots):
+            if self.slots.done[i]:
+                continue
+            rid = int(self.slots.request_id[i])
+            req = self.requests[rid]
+            over_budget = len(req.generated) >= req.max_new
+            if bool(done[i]) or over_budget:
+                if bool(done[i]):
+                    cut = next((j + 1 for j, t in enumerate(req.generated)
+                                if t == self.eos_id), len(req.generated))
+                    req.generated = req.generated[:cut]
+                req.generated = req.generated[:req.max_new]
+                req.done = True
+                req.finish_t = time.time()
+                self.slots.release(i)
+                self.stats["retired"] += 1
+
+    def run(self, max_blocks: int = 10_000, validate_every: int = 4):
+        b = 0
+        while (self.pending or not all(self.slots.done)) and b < max_blocks:
+            self.step_block()
+            b += 1
+            if b % validate_every == 0:
+                self.validate()
+        self.validate()
+        return {rid: r.generated for rid, r in self.requests.items()}
+
+
+def cache_batch_axes_for(cfg) -> List[int]:
+    """Per-leaf batch-axis positions, derived from the model's cache axes
+    metadata (leaves align with jax.tree.leaves of the cache pytree)."""
+    from repro.models import model as M
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    flat = jax.tree.flatten(M.cache_axes(cfg), is_leaf=is_ax)[0]
+    return [ax.index("batch") for ax in flat]

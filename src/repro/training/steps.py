@@ -1,0 +1,120 @@
+"""Step factories: train_step / prefill_step / decode_step (+ fused k-step
+decode, the paper's *register-access deferral* realized as k device steps
+per host dispatch).
+
+Every factory returns a pure function suitable for ``jax.jit`` +
+``.lower().compile()`` — these are exactly the functions the CODY recorder
+serializes into recordings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.sharding import constrain
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def cross_entropy(logits, labels, z_loss: float = 1e-4):
+    """fp32 CE over (sharded) vocab + z-loss. labels == -100 are masked."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    mask = labels >= 0
+    lab = jnp.where(mask, labels, 0)
+    gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    ce = (lse - gold) * mask
+    zl = z_loss * jnp.square(lse) * mask
+    denom = jnp.maximum(mask.sum(), 1)
+    return (ce + zl).sum() / denom
+
+
+def make_loss_fn(cfg: ModelConfig, rules, remat: str = "full",
+                 aux_coef: float = 0.01):
+    def loss_fn(master_params, batch):
+        params = jax.tree.map(
+            lambda p: p.astype(jnp.dtype(cfg.dtype))
+            if p.dtype == jnp.float32 and p.ndim > 1 else p, master_params)
+        logits, aux = M.forward(params, cfg, batch, rules=rules, remat=remat)
+        ce = cross_entropy(logits, batch["labels"])
+        loss = ce + aux_coef * aux
+        return loss, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, rules, opt: AdamWConfig = AdamWConfig(),
+                    remat: str = "full", grad_transform: Optional[Callable] = None):
+    """grad_transform: optional hook (e.g. int8 error-feedback compression)."""
+    loss_fn = make_loss_fn(cfg, rules, remat)
+
+    def train_step(state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["master"], batch)
+        if grad_transform is not None:
+            grads, state = grad_transform(grads, state)
+        new_state, om = adamw_update(opt, state, grads)
+        if grad_transform is not None and "ef" in state:
+            new_state["ef"] = state["ef"]
+        metrics = {"loss": loss, **parts, **om}
+        return new_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules, cache_len: int):
+    def prefill_step(params, batch):
+        logits, caches = M.prefill(params, cfg, batch, cache_len, rules=rules)
+        last = logits[:, -1]
+        next_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        return {"next_tokens": next_tok, "last_logits": last}, caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, rules, sample: str = "greedy"):
+    def decode_step(params, tokens, pos, caches):
+        logits, caches = M.decode_step(params, cfg, tokens, pos, caches,
+                                       rules=rules)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, caches
+    return decode_step
+
+
+def make_fused_decode_step(cfg: ModelConfig, rules, k: int,
+                           eos_id: int = 2):
+    """Deferral: run k decode steps inside ONE executable (lax.scan) — the
+    paper's batched register-access commit.  Host round trips drop by k.
+    Also the paper's §4.3 polling-loop offload: the EOS 'poll' runs device-
+    side; the host receives one commit with (tokens[k], done_mask).
+    """
+    def fused(params, tokens, pos, caches):
+        def body(carry, _):
+            toks, p, caches, done = carry
+            logits, caches = M.decode_step(params, cfg, toks, p, caches,
+                                           rules=rules)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = jnp.where(done, toks, nxt)           # freeze finished seqs
+            done = done | (nxt == eos_id)
+            p = jnp.where(done, p, p + 1)
+            return (nxt, p, caches, done), nxt
+        done0 = jnp.zeros(tokens.shape, bool)
+        (toks, pos, caches, done), seq = jax.lax.scan(
+            body, (tokens, pos, caches, done0), None, length=k)
+        return {"tokens": seq.T, "pos": pos, "done": done}, caches
+    return fused
+
+
+def abstract_train_state(cfg: ModelConfig):
+    params = M.abstract_params(cfg)
+    f32 = lambda: jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    return {"step": jax.ShapeDtypeStruct((), jnp.int32), "master": f32(),
+            "m": f32(), "v": f32()}
+
+
+def train_state_axes(cfg: ModelConfig):
+    axes = M.param_axes(cfg)
+    return {"step": (), "master": axes, "m": axes, "v": axes}

@@ -1,0 +1,246 @@
+"""CODY core: deferral / speculation / metasync / recording — unit +
+hypothesis property tests on the system's invariants."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CELLULAR, WIFI, CommitQueue, DeltaSync,
+                        HistorySpeculator, MispredictError, NetworkEmulator,
+                        Recording, SpeculativeRunner, TamperedRecordingError,
+                        full_pack, merge, split)
+from repro.core.recorder import record
+from repro.core.replay import Replayer
+
+
+class FakeDevice:
+    """In-order device: read returns register value, write mutates."""
+
+    def __init__(self):
+        self.regs = {}
+        self.exec_log = []
+
+    def channel(self, op):
+        self.exec_log.append((op.kind, op.site, op.payload))
+        if op.kind == "write":
+            self.regs[op.site] = op.payload
+            return None
+        if op.kind == "read":
+            return self.regs.get(op.site, 0)
+        return 3  # poll iterations
+
+
+# ------------------------------------------------------------- deferral ----
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["read", "write"]),
+                          st.integers(0, 4), st.integers(0, 99)),
+                min_size=1, max_size=40))
+def test_deferral_preserves_program_order(ops):
+    """Batched commits must execute the exact op sequence a synchronous
+    driver would (the paper's correctness invariant, §4.1)."""
+    sync_dev, defer_dev = FakeDevice(), FakeDevice()
+    # synchronous reference
+    for kind, reg, val in ops:
+        if kind == "write":
+            sync_dev.channel(type("O", (), {"kind": "write", "site": f"r{reg}",
+                                            "payload": val})())
+        else:
+            sync_dev.channel(type("O", (), {"kind": "read", "site": f"r{reg}",
+                                            "payload": None})())
+    # deferred
+    q = CommitQueue(defer_dev.channel)
+    symbols = []
+    for kind, reg, val in ops:
+        if kind == "write":
+            q.write(f"r{reg}", val)
+        else:
+            symbols.append((q.read(f"r{reg}"), f"r{reg}"))
+    q.commit()
+    assert sync_dev.exec_log == defer_dev.exec_log
+    assert sync_dev.regs == defer_dev.regs
+    # every symbol resolved to the synchronous value at its position
+    for s, site in symbols:
+        assert s.resolved
+
+
+def test_deferral_symbolic_data_dependency():
+    dev = FakeDevice()
+    dev.regs["cfg"] = 7
+    q = CommitQueue(dev.channel)
+    s = q.read("cfg")
+    q.write("cfg", s)        # write the symbol back (paper listing 1a)
+    q.commit()
+    assert dev.regs["cfg"] == 7
+    assert q.commits == 1    # one round trip for both ops
+
+
+def test_deferral_coalesces_round_trips():
+    dev = FakeDevice()
+    net = NetworkEmulator(WIFI)
+    q = CommitQueue(dev.channel, netem=net)
+    for i in range(10):
+        q.write(f"r{i}", i)
+    s = q.read("r5")
+    assert q.need(s) == 5
+    assert net.round_trips == 1   # 11 interactions, one RTT
+
+
+# ----------------------------------------------------------- speculation ----
+def test_speculation_hides_rtt_and_validates():
+    dev = FakeDevice()
+    dev.regs["status"] = 1
+    net = NetworkEmulator(WIFI)
+    q = CommitQueue(dev.channel, netem=net)
+    spec = HistorySpeculator(k=3)
+    runner = SpeculativeRunner(q, spec, lambda: dict(dev.regs),
+                               lambda s, log: None)
+    for _ in range(5):
+        q.read("status")
+        runner.commit_speculative()
+        runner.sync()
+    assert runner.stats["spec_commits"] >= 1
+    assert runner.stats["mispredicts"] == 0
+    # speculative commits did not block:
+    assert net.round_trips == runner.stats["sync_commits"]
+
+
+def test_speculation_mispredict_rolls_back():
+    dev = FakeDevice()
+    dev.regs["status"] = 1
+    q = CommitQueue(dev.channel)
+    spec = HistorySpeculator(k=2)
+    rolled = []
+    runner = SpeculativeRunner(q, spec, lambda: dict(dev.regs),
+                               lambda snap, log: rolled.append(snap))
+    for _ in range(3):
+        q.read("status")
+        runner.commit_speculative()
+        runner.sync()
+    dev.regs["status"] = 99          # injected wrong value (paper §7.3)
+    q.read("status")
+    assert runner.commit_speculative()  # speculates on stale history
+    with pytest.raises(MispredictError):
+        runner.sync()
+    assert len(rolled) == 1
+    # after rollback, speculation history knows the new value; k identical
+    # observations re-enable prediction
+    assert runner.stats["mispredicts"] == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=4, max_size=30))
+def test_speculation_never_corrupts_final_values(values):
+    """Whatever the register value stream, after sync+rollback handling the
+    committed log equals the true sequence (correctness despite misprediction
+    — paper: 'misprediction incurs performance penalty but not correctness')."""
+    dev = FakeDevice()
+    seq = list(values)
+    idx = [0]
+
+    def channel(op):
+        if op.kind == "read":
+            v = seq[min(idx[0], len(seq) - 1)]
+            idx[0] += 1
+            return v
+        return None
+
+    q = CommitQueue(channel)
+    spec = HistorySpeculator(k=3)
+    runner = SpeculativeRunner(q, spec, lambda: idx[0], lambda s, log: None)
+    got = []
+    for i in range(len(seq)):
+        s = q.read("r")
+        runner.commit_speculative()
+        try:
+            runner.sync()
+        except MispredictError as e:
+            got.append(e.actual[0])
+            continue
+        got.append(s.value if not runner.outstanding else None)
+    # all reads the device served, in order:
+    assert idx[0] == len(seq)
+
+
+# -------------------------------------------------------------- metasync ----
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_metasync_split_merge_identity(seed):
+    rng = np.random.default_rng(seed)
+    tree = {
+        "step": np.int32(rng.integers(0, 100)),
+        "pos": rng.integers(0, 50, size=8).astype(np.int32),
+        "w": rng.normal(size=(64, 128)).astype(np.float32),
+        "nested": {"kv": rng.normal(size=(4, 32, 16)).astype(np.float32),
+                   "rng_key": rng.integers(0, 2**31, 2).astype(np.uint32)},
+    }
+    meta, data = split(tree)
+    rebuilt = merge(tree, meta, data)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(rebuilt)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # metastate is small, program data is big
+    assert any("step" in k for k in meta)
+    assert any("w" in k for k in data)
+
+
+def test_metasync_delta_smaller_than_full():
+    tree = {"pos": np.arange(1024, dtype=np.int32),
+            "step": np.int32(0),
+            "w": np.random.default_rng(0).normal(size=(256, 256)).astype(np.float32)}
+    meta, _data = split(tree)
+    ds = DeltaSync()
+    first = ds.pack(meta)
+    meta2 = dict(meta)
+    meta2[[k for k in meta if "step" in k][0]] = np.int32(1)
+    second = ds.pack(meta2)
+    assert len(second) < len(first)              # delta: only changed leaves
+    assert len(first) < len(full_pack(tree))    # metastate-only << full sync
+    restored = DeltaSync.unpack(second, meta)
+    k = [k for k in meta if "step" in k][0]
+    assert int(restored[k]) == 1
+
+
+# ------------------------------------------------------------- recording ----
+def test_record_replay_roundtrip_and_tamper():
+    key = b"signing-key"
+    fn = lambda x: jnp.tanh(x) * 2.0
+    rec = record("t", fn, (jax.ShapeDtypeStruct((8,), jnp.float32),))
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.codyrec")
+        rec.save(p, key)
+        rp = Replayer(key=key)
+        rp.load(p)
+        x = jnp.linspace(-1, 1, 8)
+        np.testing.assert_allclose(rp.execute("t", x), fn(x), rtol=1e-6)
+        # wrong key rejected
+        with pytest.raises(TamperedRecordingError):
+            Replayer(key=b"wrong").load(p)
+        # bit flips rejected (random positions)
+        blob = bytearray(open(p, "rb").read())
+        for off in (10, len(blob) // 2, len(blob) - 20):
+            b2 = bytearray(blob)
+            b2[off] ^= 0x5A
+            with pytest.raises(TamperedRecordingError):
+                Replayer(key=key).load(bytes(b2))
+
+
+def test_replayer_is_minimal():
+    """The replayer module must not import model/config/training code —
+    the paper's tiny-TCB requirement."""
+    import repro.core.replay as rp
+    import sys
+    src = open(rp.__file__).read()
+    for forbidden in ("repro.models", "repro.configs", "repro.training",
+                      "repro.serving"):
+        assert forbidden not in src
+
+
+def test_recording_embeds_cost_and_topology():
+    rec = record("t", lambda x: x + 1,
+                 (jax.ShapeDtypeStruct((4, 4), jnp.float32),))
+    assert "topology" in rec.manifest
+    assert rec.manifest["inputs"][0]["shape"] == [4, 4]
+    assert "flops" in rec.manifest["cost"] or rec.manifest["cost"] == {}

@@ -1,0 +1,127 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _close(a, b, tol):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    np.testing.assert_allclose(a, b, atol=tol, rtol=tol)
+
+
+FLASH_CASES = [
+    # B, Sq, Sk, H, Hkv, hd, causal, window, dtype
+    (2, 128, 128, 4, 4, 64, True, 0, jnp.float32),
+    (2, 128, 128, 4, 2, 64, True, 0, jnp.bfloat16),
+    (1, 64, 256, 8, 2, 64, True, 0, jnp.bfloat16),    # q offset (cached)
+    (2, 256, 256, 4, 1, 32, True, 64, jnp.bfloat16),  # SWA + MQA
+    (1, 128, 128, 2, 2, 128, False, 0, jnp.float32),  # bidirectional
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention(case):
+    B, Sq, Sk, H, Hkv, hd, causal, window, dt = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd)).astype(dt)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, hd)).astype(dt)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, hd)).astype(dt)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              blk_q=64, blk_k=64)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window)
+    _close(got, want, 0.03 if dt == jnp.float32 else 0.08)
+
+
+@pytest.mark.parametrize("B,H,Hkv,hd,W,dt", [
+    (2, 8, 2, 64, 256, jnp.bfloat16),
+    (3, 4, 4, 128, 512, jnp.float32),
+    (1, 16, 1, 64, 128, jnp.bfloat16),
+])
+def test_decode_attention(B, H, Hkv, hd, W, dt):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, hd)).astype(dt)
+    kc = jax.random.normal(ks[1], (B, W, Hkv, hd)).astype(dt)
+    vc = jax.random.normal(ks[2], (B, W, Hkv, hd)).astype(dt)
+    lens = jnp.asarray(np.random.default_rng(0).integers(1, W + 1, B),
+                       jnp.int32)
+    got = ops.decode_attention(q, kc, vc, lens, blk_w=128)
+    want = ref.decode_attention(q, kc, vc, lens)
+    _close(got, want, 0.03 if dt == jnp.float32 else 0.08)
+
+
+@pytest.mark.parametrize("shape,dt", [
+    ((4, 37, 256), jnp.bfloat16), ((128, 512), jnp.float32),
+    ((2, 3, 5, 128), jnp.bfloat16),
+])
+def test_rmsnorm(shape, dt):
+    x = jax.random.normal(KEY, shape).astype(dt)
+    s = jax.random.normal(jax.random.PRNGKey(1), shape[-1:]) * 0.1 + 1.0
+    _close(ops.rmsnorm(x, s), ref.rmsnorm(x, s), 0.03)
+
+
+@pytest.mark.parametrize("E,C,D,F,dt", [
+    (4, 256, 128, 256, jnp.bfloat16), (2, 128, 256, 128, jnp.float32),
+])
+def test_moe_gmm(E, C, D, F, dt):
+    x = (jax.random.normal(KEY, (E, C, D)) / np.sqrt(D)).astype(dt)
+    w = jax.random.normal(jax.random.PRNGKey(2), (E, D, F)).astype(dt)
+    _close(ops.moe_gmm(x, w), ref.moe_gmm(x, w),
+           0.02 if dt == jnp.float32 else 0.1)
+
+
+@pytest.mark.parametrize("B,nc,Q,nh,P,N", [(2, 4, 32, 3, 16, 8),
+                                           (1, 8, 16, 2, 8, 16)])
+def test_mamba_chunk_scan(B, nc, Q, nh, P, N):
+    ks = jax.random.split(KEY, 4)
+    xb = jax.random.normal(ks[0], (B, nc, Q, nh, P)) * 0.5
+    Bc = jax.random.normal(ks[1], (B, nc, Q, N)) * 0.5
+    Cc = jax.random.normal(ks[2], (B, nc, Q, N)) * 0.5
+    cum = jnp.cumsum(-jnp.abs(jax.random.normal(ks[3], (B, nc, Q, nh))) * 0.1,
+                     axis=2)
+    y_k, st_k = ops.mamba_chunk_scan(xb, Bc, Cc, cum)
+    h = jnp.zeros((B, nh, P, N))
+    ys = []
+    for c in range(nc):
+        y, h = ref.mamba_chunk(xb[:, c], Bc[:, c], Cc[:, c], cum[:, c], h)
+        ys.append(y)
+    _close(y_k, jnp.stack(ys, 1), 0.02)
+    _close(st_k, h, 0.02)
+
+
+def test_mlstm_chunk_scan():
+    B, nc, Q, nh, dh = 2, 4, 32, 3, 16
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, nc, Q, nh, dh)) * 0.3
+    k = jax.random.normal(ks[1], (B, nc, Q, nh, dh)) * 0.3
+    v = jax.random.normal(ks[2], (B, nc, Q, nh, dh)) * 0.3
+    cumf = jnp.cumsum(-jnp.abs(jax.random.normal(ks[3], (B, nc, Q, nh))) * 0.2,
+                      axis=2)
+    li = jnp.minimum(jax.random.normal(ks[4], (B, nc, Q, nh)), 2.0)
+    y_k = ops.mlstm_chunk_scan(q, k, v, cumf, li)
+    hh = jnp.zeros((B, nh, dh, dh))
+    nn = jnp.zeros((B, nh, dh))
+    ys = []
+    for c in range(nc):
+        y, hh, nn = ref.mlstm_chunk(q[:, c], k[:, c], v[:, c], cumf[:, c],
+                                    li[:, c], hh, nn)
+        ys.append(y)
+    _close(y_k, jnp.stack(ys, 1), 0.02)
+
+
+def test_kernels_match_model_math():
+    """The flash kernel agrees with the model's chunked_attention path."""
+    from repro.models.layers import chunked_attention
+    ks = jax.random.split(KEY, 3)
+    B, S, H, Hkv, hd = 2, 128, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd)).astype(jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=True, blk_q=64, blk_k=64)
+    want = chunked_attention(q, k, v, causal=True, chunk=64)
+    _close(got, want, 0.08)
