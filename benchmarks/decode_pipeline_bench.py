@@ -1,0 +1,112 @@
+"""Decode pipeline benchmark — the ISSUE-1 acceptance artifact.
+
+Serves the same workload at pipeline depths {1, 2, 4, 8} and reports
+tokens/s plus HOST-SYNC counts: with the async pipeline the host↔device
+round trips drop from O(1/block_k) per token (one readback per fused
+block) to O(1/(block_k·depth)) (one metastate readback per frontier).
+Results are written to ``BENCH_decode.json`` so CI tracks the perf
+trajectory.
+
+    PYTHONPATH=src python -m benchmarks.decode_pipeline_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_shrink
+from repro.core.netem import WIFI, NetworkEmulator
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.serving.engine import Engine, cache_batch_axes_for
+from repro.sharding import rules_for
+from repro.training import steps as ST
+
+DEPTHS = (1, 2, 4, 8)
+BLOCK_K = 4
+CACHE_LEN = 128
+N_SLOTS = 4
+
+
+def _build_fns(cfg):
+    """Jitted steps built ONCE and shared across engines so every depth
+    pays identical (zero, after warm-up) compile cost."""
+    rules = rules_for("serve", make_host_mesh(model=1).axis_names)
+    prefill = jax.jit(ST.make_prefill_step(cfg, rules, CACHE_LEN))
+    batched_prefill = jax.jit(
+        ST.make_batched_prefill_step(cfg, rules, CACHE_LEN))
+    decode = jax.jit(
+        ST.make_fused_decode_step(cfg, rules, k=BLOCK_K, eos_id=2),
+        donate_argnums=(3,))
+    return prefill, batched_prefill, decode
+
+
+def _run_once(cfg, params, fns, depth, *, requests, max_new, speculate=True):
+    prefill, batched_prefill, decode = fns
+    net = NetworkEmulator(WIFI)
+    eng = Engine(params, prefill, decode, n_slots=N_SLOTS,
+                 cache_len=CACHE_LEN, block_k=BLOCK_K, eos_id=2,
+                 init_caches_fn=lambda: M.init_cache(cfg, N_SLOTS,
+                                                     CACHE_LEN),
+                 cache_batch_axes=cache_batch_axes_for(cfg), netem=net,
+                 speculate=speculate, pipeline_depth=depth,
+                 batched_prefill_fn=batched_prefill)
+    rng = np.random.default_rng(0)
+    for _ in range(requests):
+        plen = int(rng.integers(4, 16))
+        eng.submit(list(rng.integers(3, cfg.vocab_size, plen)), max_new)
+    t0 = time.time()
+    outs = eng.run()
+    wall_s = time.time() - t0
+    toks = sum(len(v) for v in outs.values())
+    virtual_s = net.virtual_time_s
+    return {
+        "depth": depth,
+        "tokens": toks,
+        "wall_s": round(wall_s, 4),
+        "tokens_per_s_wall": round(toks / wall_s, 1),
+        "virtual_net_s": round(virtual_s, 4),
+        "tokens_per_s": round(toks / (wall_s + virtual_s), 1),
+        "host_syncs": int(eng.stats["host_syncs"]),
+        "host_syncs_per_token": round(eng.stats["host_syncs"] / toks, 4),
+        "blocking_round_trips": net.round_trips,
+        "async_trips": net.async_trips,
+        "blocks_dispatched": int(eng.stats["blocks_dispatched"]),
+        "spec_blocks": int(eng.stats["spec_blocks"]),
+        "mispredicts": int(eng.stats["mispredicts"]),
+        "outputs_digest": hash(tuple(tuple(v) for _, v in
+                                     sorted(outs.items()))) & 0xFFFFFFFF,
+    }
+
+
+def main(quick: bool = False, arch: str = "qwen2.5-3b",
+         out_json: str = "BENCH_decode.json"):
+    cfg = smoke_shrink(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    fns = _build_fns(cfg)
+    requests = 6 if quick else 12
+    max_new = 32 if quick else 48
+    # warm-up: compile every shape the timed runs will hit
+    _run_once(cfg, params, fns, 2, requests=requests, max_new=max_new)
+    rows = [_run_once(cfg, params, fns, d, requests=requests,
+                      max_new=max_new) for d in DEPTHS]
+    digests = {r["outputs_digest"] for r in rows}
+    result = {"arch": cfg.name, "block_k": BLOCK_K, "n_slots": N_SLOTS,
+              "requests": requests, "max_new": max_new,
+              "identical_streams_across_depths": len(digests) == 1,
+              "depths": rows}
+    with open(out_json, "w") as f:
+        json.dump(result, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    for r in main(quick=args.quick):
+        print(r)

@@ -17,9 +17,10 @@ import jax, jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.training.grad_compress import compressed_psum
+from repro import compat
 from repro.analysis.hlo import analyze
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
 
 def plain(v):
@@ -31,7 +32,7 @@ def comp(v):
     return compressed_psum(v, mesh, "data")
 
 out = {}
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     for name, fn in (("psum_fp32", plain), ("psum_int8_ef", comp)):
         c = jax.jit(fn).lower(x).compile()
         a = analyze(c.as_text(), 8)

@@ -15,12 +15,32 @@ def _section(title):
     print(f"\n# === {title} ===", flush=True)
 
 
+def _decode_pipeline_section(quick: bool):
+    _section("Decode pipeline: host syncs + tokens/s vs depth "
+             "(-> BENCH_decode.json)")
+    from benchmarks import decode_pipeline_bench
+    for r in decode_pipeline_bench.main(quick=quick):
+        print(f"decode_pipeline_d{r['depth']},{r['wall_s']*1e6:.0f},"
+              f"tok_s={r['tokens_per_s']};host_syncs={r['host_syncs']};"
+              f"rts={r['blocking_round_trips']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: decode pipeline bench only, emit "
+                         "BENCH_decode.json")
     args = ap.parse_args()
     t0 = time.time()
     print("name,us_per_call,derived")
+
+    if args.smoke:
+        _decode_pipeline_section(quick=True)
+        print(f"\n# total bench wall time: {time.time()-t0:.1f}s")
+        return
+
+    _decode_pipeline_section(quick=args.quick)
 
     _section("Paper Fig.7 + Table 1: recording delays (emulated networks)")
     from benchmarks import record_replay

@@ -19,10 +19,10 @@ from repro.launch.serve import main as serve
 
 
 if __name__ == "__main__":
-    print("=== speculative continuation ON ===")
+    print("=== speculative continuation ON (pipeline depth 4) ===")
     outs_spec, eng_spec = serve(["--arch", "qwen2.5-3b", "--requests", "8",
                                  "--max-new", "24", "--slots", "4",
-                                 "--block-k", "8"])
+                                 "--block-k", "8", "--pipeline-depth", "4"])
     print("\n=== speculative continuation OFF (synchronous) ===")
     outs_sync, eng_sync = serve(["--arch", "qwen2.5-3b", "--requests", "8",
                                  "--max-new", "24", "--slots", "4",
@@ -32,4 +32,6 @@ if __name__ == "__main__":
     print(f"speculative blocks: {eng_spec.stats.get('spec_blocks', 0)} "
           f"(sync fallbacks {eng_spec.stats.get('sync_blocks', 0)}, "
           f"mispredicts {eng_spec.stats.get('mispredicts', 0)})")
+    print(f"host syncs: {eng_spec.stats.get('host_syncs', 0)} pipelined vs "
+          f"{eng_sync.stats.get('host_syncs', 0)} synchronous")
     assert same

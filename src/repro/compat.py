@@ -1,0 +1,35 @@
+"""JAX version-compat seam.
+
+The repo targets current JAX (``jax.sharding.AxisType``, ``jax.set_mesh``)
+but must also run on 0.4.x containers that predate both.  Every mesh
+construction / activation goes through these two helpers so the rest of the
+codebase never branches on the JAX version.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh, with Auto axis types when the installed JAX has them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` (jax.set_mesh or legacy ctx)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # jax.sharding.Mesh is itself a context manager
+
+
+def cost_analysis(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict on current JAX, a per-device
+    list of dicts on 0.4.x."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost

@@ -87,7 +87,8 @@ class CommitQueue:
         self.name = name
         self.queue: List[Op] = []
         self.log: List[Op] = []            # committed interaction log
-        self.commits = 0
+        self.commits = 0                   # blocking commits (1 RTT each)
+        self.async_commits = 0             # shipped without stalling
         self.deferred_total = 0
 
     # -- deferral API (paper fig. 5b) --
@@ -137,13 +138,44 @@ class CommitQueue:
         self.log.extend(ops)
         self.commits += 1
         if self.netem is not None:
-            sz = sum(64 + _payload_bytes(o.payload) for o in ops)
-            self.netem.round_trip(send_bytes=max(sz, approx_bytes),
-                                  recv_bytes=64 + 8 * len(results))
+            send, recv = _wire_bytes(ops, results)
+            self.netem.round_trip(send_bytes=max(send, approx_bytes),
+                                  recv_bytes=recv)
+        return results
+
+    def commit_async(self, approx_bytes: int = 256) -> List[Any]:
+        """Ship the queue WITHOUT a blocking round trip (paper fig. 5c).
+
+        The client executes the batch now; read symbols resolve to whatever
+        the channel returns — for the serving engine that is an in-flight
+        device future, so the host keeps running and only materializes the
+        value at the commit frontier.  Wire bytes are accounted with the
+        same op/byte math as ``commit`` but as a non-blocking trip, so
+        speculative and synchronous shipping can never drift apart in
+        netem accounting."""
+        if not self.queue:
+            return []
+        ops = self.queue
+        self.queue = []
+        results = self.execute_ops(ops)
+        self.log.extend(ops)
+        self.async_commits += 1
+        if self.netem is not None:
+            send, recv = _wire_bytes(ops, results)
+            self.netem.async_trip(send_bytes=max(send, approx_bytes),
+                                  recv_bytes=recv)
         return results
 
     def flush(self):
         return self.commit()
+
+
+def _wire_bytes(ops: List[Op], results: List[Any]):
+    """(send, recv) bytes for one shipped batch — the single source of
+    truth for commit/commit_async netem accounting."""
+    send = sum(64 + _payload_bytes(o.payload) for o in ops)
+    recv = 64 + 8 * len(results)
+    return send, recv
 
 
 def _payload_bytes(p) -> int:

@@ -15,6 +15,7 @@ from typing import Any, Optional, Sequence
 import jax
 from jax.experimental import serialize_executable as se
 
+from repro.compat import cost_analysis, set_mesh
 from repro.core.attest import fingerprint
 from repro.core.recording import Recording
 
@@ -41,7 +42,7 @@ def record(name: str, fn, args_abstract: Sequence[Any], *,
         kw["out_shardings"] = out_shardings
     jitted = jax.jit(fn, donate_argnums=donate_argnums, **kw)
     if mesh is not None:
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             lowered = jitted.lower(*args_abstract)
             compiled = lowered.compile()
     else:
@@ -62,8 +63,7 @@ def record(name: str, fn, args_abstract: Sequence[Any], *,
         "donate": list(donate_argnums),
         "inputs": [{"shape": list(getattr(a, "shape", ())),
                     "dtype": str(getattr(a, "dtype", ""))} for a in flat],
-        "cost": {k: float(v) for k, v in
-                 (compiled.cost_analysis() or {}).items()
+        "cost": {k: float(v) for k, v in cost_analysis(compiled).items()
                  if isinstance(v, (int, float))},
         "memory": {
             "arg_bytes": compiled.memory_analysis().argument_size_in_bytes,

@@ -11,6 +11,15 @@ Mirrors the paper's replayer obligations:
   * match recording to the exact hardware (§2.4)     -> topology fingerprint
   * reset/clean state around replay (§3.2)           -> fresh buffers, no
     state escapes except declared outputs (donation honored by XLA)
+
+Executables are cached by ``(name, input-avals)``: several recordings of
+the same workload at different shapes (e.g. prefill shape buckets) can
+share a logical name, and ``execute`` dispatches on the argument avals.
+The aval signature is computed from the manifest ONCE at ``load``; the
+per-call check is a tuple build + dict lookup, and a mismatch raises a
+clear ``ReplayArgumentError`` instead of an XLA crash deep in the TEE
+path.  ``warm`` runs a loaded executable once on zero inputs so the first
+real block of the serving pipeline pays no allocation/cold-start cost.
 """
 from __future__ import annotations
 
@@ -18,6 +27,7 @@ import pickle
 from typing import Any, Optional
 
 import jax
+import numpy as np
 from jax.experimental import serialize_executable as se
 
 from repro.core.attest import (TamperedRecordingError, TopologyMismatchError,
@@ -25,9 +35,18 @@ from repro.core.attest import (TamperedRecordingError, TopologyMismatchError,
 from repro.core.recording import Recording
 
 
+class ReplayArgumentError(TypeError):
+    """Replay arguments do not match any recorded executable."""
+
+
 def _topology_fingerprint() -> str:
     devs = jax.devices()
     return fingerprint(sorted(str(d.device_kind) for d in devs), len(devs))
+
+
+def _aval_signature(leaves) -> tuple:
+    return tuple((tuple(getattr(a, "shape", ())),
+                  str(getattr(a, "dtype", ""))) for a in leaves)
 
 
 class Replayer:
@@ -35,7 +54,7 @@ class Replayer:
                  enforce_topology: bool = True):
         self._key = key
         self._enforce_topology = enforce_topology
-        self._loaded = {}
+        self._loaded = {}   # name -> {aval_sig: (exe, manifest, in_tree)}
         self.stats = {"loads": 0, "executions": 0, "rejected": 0}
 
     def load(self, path_or_bytes, name: Optional[str] = None):
@@ -60,18 +79,73 @@ class Replayer:
         in_tree, out_tree = pickle.loads(rec.trees)
         exe = se.deserialize_and_load(rec.payload, in_tree, out_tree)
         nm = name or rec.manifest["name"]
-        self._loaded[nm] = (exe, rec.manifest)
+        # manifest aval check happens HERE, once: the signature is the
+        # cache key, so every execute() validates by construction
+        sig = tuple((tuple(i["shape"]), i["dtype"])
+                    for i in rec.manifest["inputs"])
+        self._loaded.setdefault(nm, {})[sig] = (exe, rec.manifest, in_tree)
         self.stats["loads"] += 1
         return nm
 
+    def preload(self, items) -> list:
+        """Load many recordings up front (paths, or (path, name) pairs) so
+        the serving pipeline never loads mid-decode."""
+        names = []
+        for it in items:
+            path, name = it if isinstance(it, tuple) else (it, None)
+            names.append(self.load(path, name))
+        return names
+
     def manifest(self, name: str) -> dict:
-        return self._loaded[name][1]
+        variants = self._loaded[name]
+        return next(iter(variants.values()))[1]
 
     def execute(self, name: str, *args) -> Any:
-        """Run the recorded executable on new inputs.  No retracing ever."""
-        exe, _man = self._loaded[name]
+        """Run the recorded executable on new inputs.  No retracing ever;
+        the aval lookup doubles as the shape/dtype validation."""
+        variants = self._loaded[name]
+        sig = _aval_signature(jax.tree.leaves(args))
+        hit = variants.get(sig)
+        if hit is None:
+            known = "\n  ".join(self._diff(sig, s) for s in variants)
+            raise ReplayArgumentError(
+                f"replay args for '{name}' match no recorded executable.\n"
+                f"got:      {self._describe(sig)}\n"
+                f"recorded: {known}")
         self.stats["executions"] += 1
-        return exe(*args)
+        return hit[0](*args)
+
+    def warm(self, name: str):
+        """Execute every variant of ``name`` once on zero-filled inputs
+        (outputs discarded) so real traffic hits warm buffers."""
+        for sig, (exe, _man, in_tree) in self._loaded[name].items():
+            leaves = [np.zeros(shape, dtype=np.dtype(dt))
+                      for shape, dt in sig]
+            args, kwargs = jax.tree.unflatten(in_tree, leaves)
+            jax.block_until_ready(exe(*args, **kwargs))
+            self.stats["executions"] += 1
+        return name
+
+    @staticmethod
+    def _describe(sig) -> str:
+        short = [f"{dt}{list(shape)}" for shape, dt in sig[:6]]
+        more = f" ... +{len(sig) - 6} leaves" if len(sig) > 6 else ""
+        return ", ".join(short) + more
+
+    @staticmethod
+    def _diff(got, want) -> str:
+        """Describe a recorded signature, pointing at the first leaf that
+        disagrees with ``got`` (the interesting one is often past any
+        truncation)."""
+        if len(got) != len(want):
+            return (f"{Replayer._describe(want)}  "
+                    f"[{len(want)} leaves, got {len(got)}]")
+        for i, (g, w) in enumerate(zip(got, want)):
+            if g != w:
+                return (f"{Replayer._describe(want)}  [first mismatch at "
+                        f"leaf {i}: got {g[1]}{list(g[0])}, recorded "
+                        f"{w[1]}{list(w[0])}]")
+        return Replayer._describe(want)
 
     def __contains__(self, name: str) -> bool:
         return name in self._loaded

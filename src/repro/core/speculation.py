@@ -80,9 +80,12 @@ class SpeculativeRunner:
     def commit_speculative(self) -> bool:
         """Try to commit the queued ops with predicted read values.
 
-        On success the commit is shipped ASYNCHRONOUSLY (device executes it;
-        no blocking round trip — paper fig. 5c) and execution continues on
-        the prediction; validation happens at ``sync()``."""
+        On success the commit is shipped ASYNCHRONOUSLY via
+        ``CommitQueue.commit_async`` (device executes it; no blocking round
+        trip — paper fig. 5c) and execution continues on the prediction;
+        validation happens at ``sync()``.  Shipping goes through the ONE
+        queue path, so in-batch symbol resolution and netem byte accounting
+        are identical to a synchronous commit."""
         ops = list(self.q.queue)
         reads = [o for o in ops if o.symbol is not None]
         pred = self.spec.predict(ops) if reads else None
@@ -92,30 +95,18 @@ class SpeculativeRunner:
             self.stats["sync_commits"] += 1
             return False
         snapshot = self.checkpoint_fn()
-        self.q.queue = []
-        for o, v in zip(reads, pred):
-            o.symbol.resolve(v)             # driver continues on prediction
-        # device executes the batch now; actual read values arrive "later"
-        actual = []
-        from repro.core.deferral import _resolve_payload
-        for op in ops:
-            op.payload = _resolve_payload(op.payload)
-            r = self.q.channel(op)
-            if op.symbol is not None:
-                actual.append(r)
-        if self.q.netem is not None:
-            self.q.netem.async_trip()       # bandwidth, no blocking RTT
+        actual = self.q.commit_async()      # ships now; host does not stall
         self.outstanding.append((ops, tuple(pred), tuple(actual), snapshot))
         self.stats["spec_commits"] += 1
         return True
 
     def sync(self):
         """Validate all outstanding speculative commits (in order) — the
-        paper's externalization barrier."""
+        paper's externalization barrier.  The ops were already logged and
+        counted by ``commit_async``; this only compares prediction against
+        the arrived values and rolls back on divergence."""
         while self.outstanding:
             ops, pred, actual, snapshot = self.outstanding.pop(0)
-            self.q.commits += 1
-            self.q.log.extend(ops)
             self.spec.record(ops, actual)
             if pred != actual:
                 self.stats["mispredicts"] += 1

@@ -22,7 +22,8 @@ from repro.analysis import hlo as hlo_an
 from repro.analysis import roofline as rf
 from repro.configs import (ARCHS, SHAPES, cell_applicable, get_config,
                            input_specs)
-from repro.launch.mesh import make_production_mesh
+from repro import compat
+from repro.launch.mesh import make_production_mesh, set_mesh
 from repro.models import model as M
 from repro.sharding import rules_for, shardings_for, spec
 from repro.training import steps as ST
@@ -109,7 +110,7 @@ def run_cell(arch, shape_name, multi_pod, overrides=None, keep_text=False):
             cfg, shape_name, mesh, overrides)
         t0 = time.time()
         dump_dir = tempfile.mkdtemp(prefix="hlo_spmd_")
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                              donate_argnums=donate)
             lowered = jitted.lower(*args)
@@ -120,7 +121,7 @@ def run_cell(arch, shape_name, multi_pod, overrides=None, keep_text=False):
                 "xla_dump_hlo_pass_re": "spmd-partitioning"})
             t_compile = time.time() - t0
         mem = compiled.memory_analysis()
-        ca = compiled.cost_analysis()
+        ca = compat.cost_analysis(compiled)
         text = compiled.as_text()
         # dtype-true (bf16) post-SPMD module for the roofline byte counts;
         # the final scheduled module inflates bf16 to f32 (CPU legalization)

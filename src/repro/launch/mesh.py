@@ -4,22 +4,26 @@
 importing this module never touches jax device state.  Single pod =
 16x16 = 256 chips (v5e pod); multi-pod = 2 pods = 512 chips with a leading
 'pod' axis (data-parallel across the DCI).
+
+Version differences (AxisType / set_mesh) are absorbed by ``repro.compat``.
 """
 from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh, set_mesh  # re-export for launchers
+
+__all__ = ["make_mesh", "set_mesh", "make_production_mesh", "make_host_mesh"]
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Mesh over whatever devices exist (tests / CPU examples)."""
     n = len(jax.devices())
     assert n % model == 0
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model, model), ("data", "model"))

@@ -24,9 +24,17 @@ from repro.training import steps as ST
 
 def build_engine(cfg, *, n_slots: int, cache_len: int, block_k: int,
                  eos_id: int, params=None, recordings_dir: str = "",
-                 key: bytes = b"", netem=None, speculate=True) -> Engine:
+                 key: bytes = b"", netem=None, speculate=True,
+                 pipeline_depth: int = 4) -> Engine:
     mesh = make_host_mesh(model=1)
     rules = rules_for("serve", mesh.axis_names)
+    batched_prefill = None
+    fixed_prompt_len = None
+    if cfg.family in ("ssm", "hybrid"):
+        # recurrent state is not position-indexed: dropped pipeline tails
+        # cannot be re-executed against an already-advanced state, so the
+        # engine's metastate-only rollback is unsound here
+        speculate = False
     if recordings_dir:
         from repro.core.replay import Replayer
         from repro.launch.record import recording_name
@@ -35,19 +43,32 @@ def build_engine(cfg, *, n_slots: int, cache_len: int, block_k: int,
                       .replace(cfg.name, cfg.name.replace("-smoke", "")))
         dec = rp.load(f"{recordings_dir}/{recording_name(cfg.name, 'decode')}"
                       .replace(cfg.name, cfg.name.replace("-smoke", "")))
+        rp.warm(dec)   # decode joins the async pipeline with no cold start
         prefill_fn = lambda p, b: rp.execute(pre, p, b)
         decode_fn = lambda p, t, po, c: rp.execute(dec, p, t, po, c)
+        # recorded executables are fixed-shape: prompts must match the
+        # recorded prefill seq (callers read this off the engine)
+        fixed_prompt_len = rp.manifest(pre)["static"].get("seq")
     else:
         prefill_fn = jax.jit(ST.make_prefill_step(cfg, rules, cache_len))
         decode_fn = jax.jit(
             ST.make_fused_decode_step(cfg, rules, k=block_k, eos_id=eos_id),
             donate_argnums=(3,))
+        # grouped right-padded admission: attention families only (decode
+        # masks rows >= pos; recurrent state is not position-indexed), and
+        # the SWA ring layout depends on the true length
+        if cfg.family in ("dense", "moe") and not cfg.sliding_window:
+            batched_prefill = jax.jit(
+                ST.make_batched_prefill_step(cfg, rules, cache_len))
     init_caches = lambda: M.init_cache(cfg, n_slots, cache_len)
-    return Engine(params, prefill_fn, decode_fn, n_slots=n_slots,
-                  cache_len=cache_len, block_k=block_k, eos_id=eos_id,
-                  init_caches_fn=init_caches,
-                  cache_batch_axes=cache_batch_axes_for(cfg), netem=netem,
-                  speculate=speculate)
+    eng = Engine(params, prefill_fn, decode_fn, n_slots=n_slots,
+                 cache_len=cache_len, block_k=block_k, eos_id=eos_id,
+                 init_caches_fn=init_caches,
+                 cache_batch_axes=cache_batch_axes_for(cfg), netem=netem,
+                 speculate=speculate, pipeline_depth=pipeline_depth,
+                 batched_prefill_fn=batched_prefill)
+    eng.fixed_prompt_len = fixed_prompt_len
+    return eng
 
 
 def main(argv=None):
@@ -60,6 +81,7 @@ def main(argv=None):
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--block-k", type=int, default=8)
     ap.add_argument("--no-speculate", action="store_true")
+    ap.add_argument("--pipeline-depth", type=int, default=4)
     ap.add_argument("--from-recordings", default="")
     ap.add_argument("--key", default="cody-demo-key")
     args = ap.parse_args(argv)
@@ -72,10 +94,11 @@ def main(argv=None):
                        block_k=args.block_k, eos_id=2, params=params,
                        recordings_dir=args.from_recordings,
                        key=args.key.encode(),
-                       speculate=not args.no_speculate)
+                       speculate=not args.no_speculate,
+                       pipeline_depth=args.pipeline_depth)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
-        plen = int(rng.integers(4, 16))
+        plen = eng.fixed_prompt_len or int(rng.integers(4, 16))
         eng.submit(list(rng.integers(3, cfg.vocab_size, plen)), args.max_new)
     t0 = time.time()
     outs = eng.run()

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.configs import get_config, smoke_shrink
 from repro.data.pipeline import Prefetcher, SyntheticLM
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, set_mesh
 from repro.models import model as M
 from repro.runtime.checkpoint import CheckpointStore
 from repro.runtime.elastic import reshard_state
@@ -68,7 +68,7 @@ def main(argv=None):
         start_step = manifest["step"]
         print(f"resumed from step {start_step} on {len(jax.devices())} devices")
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted = jax.jit(train_step, donate_argnums=(0,))
         loader = Prefetcher(data)
         t0 = time.time()

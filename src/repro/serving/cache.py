@@ -40,13 +40,17 @@ class SlotTable:
         self.done = np.array(meta["done"])
 
     def free_slots(self) -> List[int]:
-        return [i for i in range(self.n_slots) if self.done[i]]
+        return np.flatnonzero(self.done).tolist()
+
+    def active_mask(self) -> np.ndarray:
+        """Boolean mask of occupied slots (vectorized hot-path helper)."""
+        return ~self.done
 
     def alloc(self, request_id: int, prompt_len: int) -> Optional[int]:
-        free = self.free_slots()
-        if not free:
+        free = np.flatnonzero(self.done)
+        if free.size == 0:
             return None
-        s = free[0]
+        s = int(free[0])
         self.request_id[s] = request_id
         self.pos[s] = prompt_len
         self.committed_pos[s] = prompt_len

@@ -2,13 +2,32 @@
 
 Decode runs in fused k-step blocks (ONE host dispatch per k tokens — the
 paper's register-access deferral + §4.3 polling-loop offload: the EOS
-"poll" lives device-side inside the block).  The host pipeline goes further
-with *speculative continuation* (§4.2): it dispatches the next block
-WITHOUT waiting for the previous block's done-mask readback when the
-commit history is k-confident that nothing finished; validation happens at
-the commit frontier, and a mispredict rolls back pure metastate (positions,
-token tails) — the paper's replay-based recovery, cheap because KV rows
-beyond the committed position are inert.
+"poll" lives device-side inside the block).  The hot path is a true
+ASYNCHRONOUS PIPELINE: a dispatched block's outputs stay on device as
+in-flight futures and the next block's inputs chain directly off them
+(``tokens[:, -1]``, ``pos``), so up to ``pipeline_depth`` blocks are in
+flight with ZERO host↔device syncs.  The only transfer is a small
+done-mask/metastate readback at ``validate()`` — the commit frontier —
+matching the paper's metastate-only sync (§5).
+
+Speculative continuation (§4.2) decides whether chaining is allowed: when
+the commit history is k-confident about the done-mask, blocks ship via
+``CommitQueue.commit_async`` (no blocking round trip); otherwise the engine
+falls back to a synchronous commit.  Because token tails are applied only
+at the frontier, a mispredict (a sequence finished mid-pipeline) rolls
+back by simply NOT applying the speculative tail — pure metastate, no
+device work is redone; KV rows beyond the committed position are inert
+(repro.serving.cache invariant).
+
+Admission is batched: pending requests are grouped, right-padded to shape
+buckets, prefilled in one dispatch, and scattered into the slot caches
+with one vectorized indexed-set per cache leaf.  Right padding is sound
+for attention families because decode masks cache rows >= pos; recurrent
+families (ssm/hybrid/xlstm) must keep the per-request path (their state is
+not position-indexed) — the launcher gates this.  The same non-position-
+indexed argument means recurrent families should serve with
+``speculate=False``: rolled-back pipeline tails cannot be re-executed
+against an already-advanced state.
 
 The engine can execute through live jitted functions OR through signed
 recordings via the Replayer (``use_replayer=True``) — the latter is the
@@ -19,7 +38,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +47,9 @@ import numpy as np
 from repro.core.deferral import CommitQueue, Op
 from repro.core.speculation import HistorySpeculator
 from repro.serving.cache import SlotTable
+
+ALL_RUNNING = ("all_running",)
+SOME_DONE = ("some_done",)
 
 
 @dataclasses.dataclass
@@ -46,16 +68,24 @@ class Engine:
     """prefill_fn(params, batch) -> ({"next_tokens", ...}, caches_for_slot)
     fused_decode_fn(params, tokens, pos, caches) -> ({"tokens":[B,k],
     "pos", "done"}, caches).  Both may be live jits or Replayer handles.
+
+    ``batched_prefill_fn(params, tokens[B,S], lengths[B])`` (optional)
+    enables grouped admission; ``pipeline_depth`` bounds how many decode
+    blocks may be in flight before the frontier must drain.
     """
 
     def __init__(self, params, prefill_fn, fused_decode_fn, *, n_slots: int,
                  cache_len: int, block_k: int, eos_id: int = 2,
                  init_caches_fn=None, cache_batch_axes=None, netem=None,
-                 spec_k: int = 3, speculate: bool = True):
+                 spec_k: int = 3, speculate: bool = True,
+                 pipeline_depth: int = 4, batched_prefill_fn=None,
+                 prefill_buckets: Sequence[int] = (8, 16, 32, 64, 128)):
         self.params = params
         self.prefill_fn = prefill_fn
+        self.batched_prefill_fn = batched_prefill_fn
         self.fused_decode_fn = fused_decode_fn
         self.block_k = block_k
+        self.cache_len = cache_len
         self.eos_id = eos_id
         self.netem = netem
         self.slots = SlotTable(n_slots)
@@ -68,9 +98,15 @@ class Engine:
         self.queue = CommitQueue(self._channel, netem=netem, name="decode")
         self.spec = HistorySpeculator(k=spec_k)
         self.speculate = speculate
-        self.inflight: List[dict] = []     # speculative (unvalidated) blocks
+        self.pipeline_depth = max(1, pipeline_depth)
+        self.prefill_buckets = tuple(sorted(prefill_buckets))
+        self.inflight: List[dict] = []     # unvalidated blocks (device futures)
         self.stats = collections.Counter()
         self._slot_tokens = np.zeros(n_slots, np.int32)
+        # device-chained decode inputs; None => host metastate authoritative
+        self._dev_tokens = None
+        self._dev_pos = None
+        self._last_block_out = None
 
     # ------------------------------------------------------------ channel --
     def _channel(self, op: Op):
@@ -78,22 +114,30 @@ class Engine:
         if op.kind == "write":      # dispatch a fused decode block
             self._dispatch_block()
             return None
-        if op.kind == "read":       # read back done mask + new tokens
-            return self._last_block_result
+        if op.kind == "read":       # done mask + tokens: an in-flight future
+            return self._last_block_out
         return None
 
     def _dispatch_block(self):
-        toks = jnp.asarray(self._slot_tokens)
-        pos = jnp.asarray(self.slots.pos)
+        if self._dev_tokens is None:   # re-seed the chain from host metastate
+            self._dev_tokens = jnp.asarray(self._slot_tokens)
+            self._dev_pos = jnp.asarray(self.slots.pos)
         out, self.caches = self.fused_decode_fn(
-            self.params, toks, pos, self.caches)
-        tokens = np.asarray(out["tokens"])          # [B, k]
-        done = np.asarray(out["done"])
-        newpos = np.asarray(out["pos"])
-        self._last_block_result = (tokens.tobytes(), done.tobytes(),
-                                   newpos.tobytes())
-        self._last_block_arrays = (tokens, done, newpos)
+            self.params, self._dev_tokens, self._dev_pos, self.caches)
+        # chain the NEXT block's inputs off this block's device outputs:
+        # nothing is read back (the fused kernel freezes finished rows, so
+        # tokens[:, -1]/pos are exactly what a host round trip would feed)
+        self._dev_tokens = out["tokens"][:, -1]
+        self._dev_pos = out["pos"]
+        self._last_block_out = out
         self.stats["blocks_dispatched"] += 1
+
+    def _materialize(self, out):
+        """Host←device transfer of one block's metastate (tokens/done/pos).
+        Call sites account ``stats['host_syncs']`` — a frontier drain is ONE
+        stall no matter how many blocks it validates."""
+        return (np.asarray(out["tokens"]), np.asarray(out["done"]),
+                np.asarray(out["pos"]))
 
     # ------------------------------------------------------------- public --
     def submit(self, prompt: List[int], max_new: int) -> int:
@@ -103,142 +147,215 @@ class Engine:
         self.pending.append(rid)
         return rid
 
+    # ---------------------------------------------------------- admission --
     def _admit(self):
-        while self.pending and self.slots.free_slots():
+        if not self.pending or not self.slots.done.any():
+            return
+        if self.inflight:
+            # admission changes the decode batch and re-seeds the device
+            # chain from host metastate — which is STALE while blocks are
+            # in flight (tails apply at the frontier).  Drain first.
+            self.validate()
+        group = []
+        while self.pending:
             rid = self.pending[0]
             req = self.requests[rid]
             slot = self.slots.alloc(rid, len(req.prompt))
             if slot is None:
-                return
+                break
             self.pending.popleft()
-            self._prefill_into_slot(req, slot)
-            self.stats["admitted"] += 1
+            group.append((req, slot))
+        if not group:
+            return
+        self._dev_tokens = None            # host metastate changes below
+        if self.batched_prefill_fn is None:
+            for req, slot in group:
+                self._prefill_into_slot(req, slot)
+        else:
+            for plen, members in sorted(self._bucketize(group).items()):
+                self._prefill_group(members, plen)
+        self.stats["admitted"] += len(group)
+
+    def _bucketize(self, group):
+        """Group (request, slot) pairs by padded prompt length so each
+        bucket is ONE prefill dispatch (and one jit shape)."""
+        buckets: Dict[int, list] = {}
+        for req, slot in group:
+            plen = len(req.prompt)
+            padded = next((b for b in self.prefill_buckets if b >= plen),
+                          plen)
+            padded = max(min(padded, self.cache_len), plen)
+            buckets.setdefault(padded, []).append((req, slot))
+        return buckets
+
+    def _prefill_group(self, members, padded_len: int):
+        """One dispatch for a whole bucket.  Right padding is sound: each
+        row's next token is read at its true last position and decode masks
+        cache rows >= pos, so pad garbage in the caches is inert."""
+        toks = np.zeros((len(members), padded_len), np.int32)
+        lens = np.empty(len(members), np.int32)
+        for row, (req, _slot) in enumerate(members):
+            toks[row, :len(req.prompt)] = req.prompt
+            lens[row] = len(req.prompt)
+        out, caches = self.batched_prefill_fn(
+            self.params, jnp.asarray(toks), jnp.asarray(lens))
+        firsts = np.asarray(out["next_tokens"])
+        for row, (req, slot) in enumerate(members):
+            self._slot_tokens[slot] = int(firsts[row])
+            req.generated.append(int(firsts[row]))
+        self._scatter_caches(caches, np.array([s for _, s in members]))
+        if self.netem is not None:
+            self.netem.round_trip()    # ONE synchronous commit per bucket
+        self.stats["prefill_dispatches"] += 1
+
+    def _scatter_caches(self, new_caches, slots_arr: np.ndarray):
+        """Vectorized scatter of a prefilled group into the slot caches:
+        one indexed ``.set`` per cache leaf (not per request per leaf)."""
+        flat_c, td = jax.tree.flatten(self.caches)
+        flat_n = jax.tree.leaves(new_caches)
+        axes = self._batch_axes or [0] * len(flat_c)
+        idx = jnp.asarray(slots_arr)
+        out_leaves = []
+        for c, n, ax in zip(flat_c, flat_n, axes):
+            sel = (slice(None),) * ax + (idx,)
+            out_leaves.append(c.at[sel].set(n.astype(c.dtype)))
+        self.caches = jax.tree.unflatten(td, out_leaves)
 
     def _prefill_into_slot(self, req: Request, slot: int):
+        """Per-request path: exact shapes (required for recorded prefill
+        executables and for recurrent-state families)."""
         batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
         out, caches = self.prefill_fn(self.params, batch)
         first = int(np.asarray(out["next_tokens"])[0])
         self._slot_tokens[slot] = first
         req.generated.append(first)
-        # copy the single-sequence caches into this slot's row
-        flat_c, td = jax.tree.flatten(self.caches)
-        flat_n = jax.tree.leaves(caches)
-        axes = self._batch_axes or [0] * len(flat_c)
-        out_leaves = []
-        for c, n, ax in zip(flat_c, flat_n, axes):
-            row = jnp.take(n, 0, axis=ax)   # shapes align: same cache_len
-            out_leaves.append(
-                c.at[(slice(None),) * ax + (slot,)].set(row.astype(c.dtype)))
-        self.caches = jax.tree.unflatten(td, out_leaves)
+        self._scatter_caches(caches, np.array([slot]))
         if self.netem is not None:
             self.netem.round_trip()     # prefill is a synchronous commit
+        self.stats["prefill_dispatches"] += 1
 
-    # The decode pipeline: write(dispatch) + read(done mask) per block.
+    # ------------------------------------------------------------- decode --
     def step_block(self):
-        """One fused block for all active slots; returns #active."""
+        """One fused block for all active slots; returns #active.
+
+        With speculation, up to ``pipeline_depth`` blocks stay in flight as
+        device futures (shipped via ``commit_async``); without it — or when
+        history is not k-confident — the block commits synchronously."""
+        if len(self.inflight) >= self.pipeline_depth:
+            self.validate()            # frontier full: drain before refill
         self._admit()
-        active = [i for i in range(self.slots.n_slots)
-                  if not self.slots.done[i]]
+        active = int(self.slots.active_mask().sum())
         if not active:
             return 0
-        snapshot = {"slots": self.slots.meta(),
-                    "gen": {r.rid: list(r.generated)
-                            for r in self.requests.values()},
-                    "tok": self._slot_tokens.copy()}
         self.queue.write("decode.block")
-        sym = self.queue.read("decode.done_mask")
+        self.queue.read("decode.done_mask")
         ops = list(self.queue.queue)
         pred = self.spec.predict(ops) if self.speculate else None
         if pred is not None:
-            # speculative continuation: don't block on the readback
-            self.queue.queue = []
-            self.queue.execute_ops(ops)     # device runs; actual kept aside
-            actual = self._last_block_arrays
-            if self.netem is not None:
-                self.netem.async_trip()
-            self.inflight.append({"snapshot": snapshot, "ops": ops,
-                                  "actual": actual, "pred": pred})
-            self._apply_block(actual, speculative=True)
+            # speculative continuation: ship without blocking; token tails
+            # are applied (and validated) only at the commit frontier
+            self.queue.commit_async()
+            self.inflight.append({"ops": ops, "out": self._last_block_out,
+                                  "pred": pred})
             self.stats["spec_blocks"] += 1
         else:
+            if self.inflight:
+                self.validate()        # program order: drain, then block
             self.queue.commit()
-            actual = self._last_block_arrays
+            actual = self._materialize(self._last_block_out)
+            self.stats["host_syncs"] += 1
             self._apply_block(actual, speculative=False)
-            outcome = ("all_running",) if not bool(actual[1].any()) \
-                else ("some_done",)
-            self.spec.record(ops, outcome)
+            self.spec.record(
+                ops, SOME_DONE if actual[1].any() else ALL_RUNNING)
             self._retire(actual)
             self.stats["sync_blocks"] += 1
-        return len(active)
+        return active
 
     def validate(self):
-        """Commit frontier: validate speculative blocks in order (§4.2)."""
-        while self.inflight:
-            blk = self.inflight.pop(0)
-            actual = blk["actual"]
-            outcome = ("all_running",) if not bool(actual[1].any()) \
-                else ("some_done",)
-            self.spec.record(blk["ops"], outcome)
-            if blk["pred"] != outcome:
-                # mispredict: some sequence finished inside a speculative
-                # block -> roll back metastate to the snapshot, re-apply the
-                # block with EOS honored (replay from the log), drop the
-                # rest of the speculative pipeline.
-                self.stats["mispredicts"] += 1
-                self.slots.restore(blk["snapshot"]["slots"])
-                for rid, gen in blk["snapshot"]["gen"].items():
-                    self.requests[rid].generated = list(gen)
-                self._slot_tokens = blk["snapshot"]["tok"].copy()
-                self._apply_block(actual, speculative=False)
+        """Commit frontier (§4.2 + §5): ONE metastate readback validates
+        every in-flight block in order.  A mispredict — some sequence
+        finished inside the pipeline — applies the offending block with EOS
+        honored and simply DROPS the speculative tail: metastate-only
+        rollback, no device work is redone."""
+        ok = True
+        if self.inflight:
+            pipeline, self.inflight = self.inflight, []
+            self.stats["host_syncs"] += 1      # one stall for the drain
+            if self.netem is not None:
+                # the paper's metastate-only sync: done masks + token tails
+                n, k = self.slots.n_slots, self.block_k
+                self.netem.round_trip(
+                    send_bytes=64,
+                    recv_bytes=len(pipeline) * n * (4 * k + 5))
+            for b_idx, blk in enumerate(pipeline):
+                actual = self._materialize(blk["out"])
+                outcome = SOME_DONE if actual[1].any() else ALL_RUNNING
+                self.spec.record(blk["ops"], outcome)
+                if blk["pred"] != outcome:
+                    self.stats["mispredicts"] += 1
+                    self._apply_block(actual, speculative=False)
+                    self._retire(actual)
+                    self._dev_tokens = None    # chain built on a lie
+                    self.stats["dropped_blocks"] += len(pipeline) - b_idx - 1
+                    ok = False
+                    break
+                self._apply_block(
+                    actual, speculative=outcome == ALL_RUNNING)
                 self._retire(actual)
-                self.inflight.clear()
-                return False
-            self._retire(actual)
-            self.stats["validated_blocks"] += 1
+                self.stats["validated_blocks"] += 1
         # frontier clean: commit generated tails
         for req in self.requests.values():
             req.committed = len(req.generated)
         self.slots.committed_pos[:] = self.slots.pos
-        return True
+        return ok
 
     # ------------------------------------------------------------ helpers --
     def _apply_block(self, actual, speculative: bool):
+        """Extend per-request tails from one block's metastate.  Mask math
+        is vectorized; only the list extends touch Python objects."""
         tokens, done, newpos = actual
-        for i in range(self.slots.n_slots):
-            if self.slots.done[i]:
-                continue
-            rid = int(self.slots.request_id[i])
-            req = self.requests[rid]
-            new = [int(t) for t in tokens[i]]
-            if not speculative and bool(done[i]):
-                # truncate at EOS
-                cut = next((j + 1 for j, t in enumerate(new)
-                            if t == self.eos_id), len(new))
-                new = new[:cut]
-            req.generated.extend(new)
-            self._slot_tokens[i] = new[-1] if new else self._slot_tokens[i]
-        self.slots.pos[:] = np.asarray(newpos)[:self.slots.n_slots]
+        n = self.slots.n_slots
+        live = self.slots.active_mask()
+        if not live.any():
+            return
+        k = tokens.shape[1]
+        cut = np.full(n, k, np.int64)
+        if not speculative:
+            iseos = tokens[:n] == self.eos_id
+            hit = iseos.any(axis=1) & np.asarray(done[:n], bool)
+            if hit.any():
+                cut[hit] = iseos[hit].argmax(axis=1) + 1
+        last = tokens[np.arange(n), cut - 1]
+        for i in np.flatnonzero(live):
+            req = self.requests[int(self.slots.request_id[i])]
+            req.generated.extend(int(t) for t in tokens[i, :cut[i]])
+        self._slot_tokens[live] = last[live]
+        self.slots.pos[live] = np.asarray(newpos)[:n][live]
 
     def _retire(self, actual):
         _tokens, done, _ = actual
-        for i in range(self.slots.n_slots):
-            if self.slots.done[i]:
+        done = np.asarray(done[: self.slots.n_slots], bool)
+        for i in np.flatnonzero(self.slots.active_mask()):
+            req = self.requests[int(self.slots.request_id[i])]
+            if not (done[i] or len(req.generated) >= req.max_new):
                 continue
-            rid = int(self.slots.request_id[i])
-            req = self.requests[rid]
-            over_budget = len(req.generated) >= req.max_new
-            if bool(done[i]) or over_budget:
-                if bool(done[i]):
-                    cut = next((j + 1 for j, t in enumerate(req.generated)
-                                if t == self.eos_id), len(req.generated))
-                    req.generated = req.generated[:cut]
-                req.generated = req.generated[:req.max_new]
-                req.done = True
-                req.finish_t = time.time()
-                self.slots.release(i)
-                self.stats["retired"] += 1
+            if done[i]:
+                g = np.asarray(req.generated)
+                eos = np.flatnonzero(g == self.eos_id)
+                if eos.size:                   # truncate at first EOS
+                    req.generated = req.generated[:int(eos[0]) + 1]
+            req.generated = req.generated[:req.max_new]
+            req.done = True
+            req.finish_t = time.time()
+            self.slots.release(i)
+            self._dev_tokens = None            # slot table changed
+            self.stats["retired"] += 1
 
-    def run(self, max_blocks: int = 10_000, validate_every: int = 4):
+    def run(self, max_blocks: int = 10_000,
+            validate_every: Optional[int] = None):
+        """Serve until drained.  The frontier is visited every
+        ``validate_every`` blocks (default: the pipeline depth)."""
+        validate_every = validate_every or self.pipeline_depth
         b = 0
         while (self.pending or not all(self.slots.done)) and b < max_blocks:
             self.step_block()

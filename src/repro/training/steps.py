@@ -74,6 +74,22 @@ def make_prefill_step(cfg: ModelConfig, rules, cache_len: int):
     return prefill_step
 
 
+def make_batched_prefill_step(cfg: ModelConfig, rules, cache_len: int):
+    """Grouped-admission prefill (serving): right-padded prompts share ONE
+    dispatch; each row's next token is read at its true last position
+    (causal attention makes it independent of the padding).  Sound for
+    attention families because decode masks cache rows >= pos; recurrent
+    families (ssm/hybrid) must use the per-request path."""
+    def batched_prefill_step(params, tokens, lengths):
+        logits, caches = M.prefill(params, cfg, {"tokens": tokens},
+                                   cache_len, rules=rules)
+        idx = (lengths - 1).astype(jnp.int32)[:, None, None]
+        last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+        next_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        return {"next_tokens": next_tok, "last_logits": last}, caches
+    return batched_prefill_step
+
+
 def make_decode_step(cfg: ModelConfig, rules, sample: str = "greedy"):
     def decode_step(params, tokens, pos, caches):
         logits, caches = M.decode_step(params, cfg, tokens, pos, caches,

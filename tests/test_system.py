@@ -12,6 +12,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, smoke_shrink
+from repro import compat
 from repro.models import model as M
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -107,12 +108,12 @@ import sys
 sys.path.insert(0, sys.argv[1])
 import jax, jax.numpy as jnp
 from repro.configs import get_config, smoke_shrink, input_specs
+from repro import compat
 from repro.sharding import rules_for, shardings_for
 from repro.models import model as M
 from repro.training import steps as ST
 from repro.analysis.hlo import analyze
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 for arch in ("qwen2.5-3b", "zamba2-1.2b"):
     cfg = smoke_shrink(get_config(arch), vocab_size=512)
     rules = rules_for("train", mesh.axis_names)
@@ -121,7 +122,7 @@ for arch in ("qwen2.5-3b", "zamba2-1.2b"):
     batch = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32),
              "labels": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
     st_sh = shardings_for(ST.train_state_axes(cfg), state, mesh, rules)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         c = jax.jit(fn, in_shardings=(st_sh, None),
                     donate_argnums=(0,)).lower(state, batch).compile()
     cost = analyze(c.as_text(), 8)
