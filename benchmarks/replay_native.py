@@ -57,7 +57,9 @@ def bench_arch(arch: str, iters: int = 30) -> dict:
     rec = record(f"{arch}:prefill", fn, (params, batch), mesh=mesh)
     blob = rec.sign_with(b"k").to_bytes()
     t0 = time.perf_counter()
-    rp = Replayer(key=None)
+    # timing-only harness on bytes we just produced: unsigned load is an
+    # explicit opt-in (the serving paths always verify)
+    rp = Replayer(key=None, allow_unsigned=True)
     name = rp.load(blob)
     out = rp.execute(name, params, batch)
     jax.block_until_ready(out[0]["next_tokens"])

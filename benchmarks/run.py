@@ -15,6 +15,16 @@ def _section(title):
     print(f"\n# === {title} ===", flush=True)
 
 
+def _registry_section(quick: bool):
+    _section("Registry: cold record vs warm hit vs delta re-record "
+             "(-> BENCH_registry.json)")
+    from benchmarks import registry_bench
+    for r in registry_bench.main(quick=quick):
+        print(f"registry_{r['scenario']}_{r['net']},{r['time_s']*1e6:.0f},"
+              f"rec_rts={r['recording_round_trips']};"
+              f"records={r['record_calls']};rxB={r['bytes_received']}")
+
+
 def _decode_pipeline_section(quick: bool):
     _section("Decode pipeline: host syncs + tokens/s vs depth "
              "(-> BENCH_decode.json)")
@@ -29,18 +39,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI mode: decode pipeline bench only, emit "
-                         "BENCH_decode.json")
+                    help="CI mode: decode pipeline + registry benches only, "
+                         "emit BENCH_decode.json + BENCH_registry.json")
     args = ap.parse_args()
     t0 = time.time()
     print("name,us_per_call,derived")
 
     if args.smoke:
         _decode_pipeline_section(quick=True)
+        _registry_section(quick=True)
         print(f"\n# total bench wall time: {time.time()-t0:.1f}s")
         return
 
     _decode_pipeline_section(quick=args.quick)
+    _registry_section(quick=args.quick)
 
     _section("Paper Fig.7 + Table 1: recording delays (emulated networks)")
     from benchmarks import record_replay

@@ -1,7 +1,8 @@
 """CODY core: record/replay of compiled execution plans + the paper's three
 I/O optimizations (deferral, speculation, metastate-only sync)."""
 from repro.core.attest import (TamperedRecordingError, TopologyMismatchError,
-                               fingerprint, sign, verify)
+                               UnverifiedRecordingError, fingerprint, sign,
+                               verify)
 from repro.core.deferral import CommitQueue, Op, Symbol, UnresolvedSymbolError
 from repro.core.metasync import DeltaSync, full_pack, is_metastate, merge, split
 from repro.core.netem import CELLULAR, LOCAL, WIFI, NetProfile, NetworkEmulator
@@ -15,4 +16,5 @@ __all__ = [
     "full_pack", "is_metastate", "merge", "split", "NetworkEmulator",
     "NetProfile", "WIFI", "CELLULAR", "LOCAL", "fingerprint", "sign",
     "verify", "TamperedRecordingError", "TopologyMismatchError",
+    "UnverifiedRecordingError",
 ]

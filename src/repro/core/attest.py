@@ -29,6 +29,13 @@ class TamperedRecordingError(Exception):
     pass
 
 
+class UnverifiedRecordingError(ValueError):
+    """A recording was about to be deserialized without HMAC verification
+    and the caller did not explicitly opt in (``allow_unsigned=True``).
+    Unsigned loads run ``pickle.loads`` on untrusted bytes — the exact
+    attack the paper's signing step exists to prevent."""
+
+
 class TopologyMismatchError(Exception):
     """Replay on hardware that does not match the recording (paper §2.4:
     recordings are only valid for the exact GPU/mesh they were made for)."""

@@ -49,10 +49,49 @@ class NetworkEmulator:
         self.bytes_received += recv_bytes
         self.virtual_time_s += (send_bytes + recv_bytes) / self.profile.bw_bytes_s
 
-    def one_way(self, nbytes: int):
-        self.bytes_sent += nbytes
+    def one_way(self, nbytes: int, direction: str = "send"):
+        """One streamed transfer.  ``direction`` is from the client's point
+        of view: 'send' = client->cloud (upload), 'recv' = cloud->client
+        (download, e.g. a registry chunk fetch)."""
+        if direction == "send":
+            self.bytes_sent += nbytes
+        elif direction == "recv":
+            self.bytes_received += nbytes
+        else:
+            raise ValueError(f"direction must be send|recv, got {direction!r}")
         self.virtual_time_s += self.profile.rtt_s / 2 + \
             nbytes / self.profile.bw_bytes_s
+
+    def one_way_recv(self, nbytes: int):
+        self.one_way(nbytes, direction="recv")
+
+    ACK_BYTES = 64
+
+    def transfer(self, nbytes: int, chunk_size: int = 65536,
+                 direction: str = "recv") -> int:
+        """Chunked bulk transfer (registry fetch/publish billing): one
+        blocking round trip to set the stream up, then a pipelined flow —
+        bandwidth is paid for every byte, the RTT only once, and each chunk
+        is acked asynchronously (``ACK_BYTES`` in the opposite direction).
+        Returns the number of chunks billed."""
+        if nbytes <= 0:
+            return 0
+        if chunk_size <= 0:
+            raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+        chunks = -(-nbytes // chunk_size)          # ceil division
+        ack_bytes = self.ACK_BYTES * chunks
+        if direction == "recv":
+            self.bytes_received += nbytes
+            self.bytes_sent += ack_bytes
+        elif direction == "send":
+            self.bytes_sent += nbytes
+            self.bytes_received += ack_bytes
+        else:
+            raise ValueError(f"direction must be send|recv, got {direction!r}")
+        self.round_trips += 1
+        self.virtual_time_s += self.profile.rtt_s + \
+            (nbytes + ack_bytes) / self.profile.bw_bytes_s
+        return chunks
 
     def snapshot(self) -> dict:
         return {"time_s": self.virtual_time_s, "round_trips": self.round_trips,

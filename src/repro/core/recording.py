@@ -21,8 +21,8 @@ from typing import Any, Dict, Optional
 
 import msgpack
 
-from repro.core.attest import (TamperedRecordingError, fingerprint, sign,
-                               verify)
+from repro.core.attest import (TamperedRecordingError,
+                               UnverifiedRecordingError, sign, verify)
 
 FORMAT_VERSION = 2
 
@@ -49,7 +49,17 @@ class Recording:
             "signature": self.signature}, use_bin_type=True)
 
     @staticmethod
-    def from_bytes(blob: bytes, key: Optional[bytes] = None) -> "Recording":
+    def from_bytes(blob: bytes, key: Optional[bytes] = None, *,
+                   allow_unsigned: bool = False) -> "Recording":
+        """Parse + verify a recording.  HMAC verification is NOT optional:
+        loading without a key (i.e. skipping verification of bytes that
+        will later reach ``pickle.loads``) requires ``allow_unsigned=True``
+        as an explicit, greppable opt-in."""
+        if key is None and not allow_unsigned:
+            raise UnverifiedRecordingError(
+                "Recording.from_bytes without a signing key skips HMAC "
+                "verification before untrusted deserialization; pass "
+                "key=... or opt in explicitly with allow_unsigned=True")
         try:
             d = msgpack.unpackb(blob, raw=False)
             if d.get("v") != FORMAT_VERSION:
@@ -70,6 +80,8 @@ class Recording:
             f.write(self.to_bytes())
 
     @staticmethod
-    def load(path: str, key: Optional[bytes] = None) -> "Recording":
+    def load(path: str, key: Optional[bytes] = None, *,
+             allow_unsigned: bool = False) -> "Recording":
         with open(path, "rb") as f:
-            return Recording.from_bytes(f.read(), key)
+            return Recording.from_bytes(f.read(), key,
+                                        allow_unsigned=allow_unsigned)

@@ -31,7 +31,7 @@ import numpy as np
 from jax.experimental import serialize_executable as se
 
 from repro.core.attest import (TamperedRecordingError, TopologyMismatchError,
-                               fingerprint)
+                               UnverifiedRecordingError, fingerprint)
 from repro.core.recording import Recording
 
 
@@ -51,8 +51,15 @@ def _aval_signature(leaves) -> tuple:
 
 class Replayer:
     def __init__(self, key: Optional[bytes] = None,
-                 enforce_topology: bool = True):
+                 enforce_topology: bool = True,
+                 allow_unsigned: bool = False):
+        if key is None and not allow_unsigned:
+            raise UnverifiedRecordingError(
+                "Replayer without a signing key would pickle.loads "
+                "unverified recordings; pass key=... or opt in with "
+                "allow_unsigned=True")
         self._key = key
+        self._allow_unsigned = allow_unsigned
         self._enforce_topology = enforce_topology
         self._loaded = {}   # name -> {aval_sig: (exe, manifest, in_tree)}
         self.stats = {"loads": 0, "executions": 0, "rejected": 0}
@@ -60,9 +67,12 @@ class Replayer:
     def load(self, path_or_bytes, name: Optional[str] = None):
         try:
             if isinstance(path_or_bytes, (bytes, bytearray)):
-                rec = Recording.from_bytes(bytes(path_or_bytes), self._key)
+                rec = Recording.from_bytes(
+                    bytes(path_or_bytes), self._key,
+                    allow_unsigned=self._allow_unsigned)
             else:
-                rec = Recording.load(path_or_bytes, self._key)
+                rec = Recording.load(path_or_bytes, self._key,
+                                     allow_unsigned=self._allow_unsigned)
         except TamperedRecordingError:
             self.stats["rejected"] += 1
             raise

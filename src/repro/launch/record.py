@@ -1,10 +1,15 @@
-"""The CODY "cloud dryrun service" CLI: produce signed recordings.
+"""The CODY "cloud dryrun service" CLI: produce signed recordings and
+publish them into the recording registry.
 
     python -m repro.launch.record --arch qwen2.5-3b --smoke \
         --kinds prefill,decode --out /tmp/recordings --key secret
 
-Recordings are keyed by (arch, kind, shape, mesh fingerprint); the client
-TEE replays them via repro.launch.replay / serving.Engine(use recordings).
+Recordings are identified by ``registry.key_for(arch, kind, shapes,
+mesh_fp)`` — the same key the serve CLI fetches by and the replayer
+caches executables under.  Each recording is written both as a flat
+``.codyrec`` file (legacy/offline path) and into the content-addressed
+registry at ``--registry`` (delta-published: a re-record after a config
+tweak ships only changed chunks).
 """
 from __future__ import annotations
 
@@ -15,15 +20,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, smoke_shrink
-from repro.core.recorder import record
+from repro.core.attest import fingerprint
+from repro.core.recorder import mesh_descriptor, record
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
+from repro.registry import RecordingStore, RegistryService, key_arch, key_for
 from repro.sharding import rules_for
 from repro.training import steps as ST
 
 
 def recording_name(arch: str, kind: str, extra: str = "") -> str:
-    return f"{arch}_{kind}{('_' + extra) if extra else ''}.codyrec"
+    """Flat on-disk filename for a recording (identity normalization is
+    shared with the registry via ``key_arch``)."""
+    return f"{key_arch(arch)}_{kind}{('_' + extra) if extra else ''}.codyrec"
 
 
 def build_step(cfg, kind: str, rules, *, cache_len: int, block_k: int = 8,
@@ -42,16 +51,41 @@ def build_step(cfg, kind: str, rules, *, cache_len: int, block_k: int = 8,
     raise ValueError(kind)
 
 
+def static_meta_for(kind: str, *, cache_len: int, block_k: int, batch: int,
+                    seq: int) -> dict:
+    """The shape/static description that parameterizes ``build_step`` —
+    also the ``shapes`` component of the registry key, so record and
+    serve derive identical keys from identical CLI arguments.  ``seq``
+    only shapes prefill (decode steps one token per slot per iteration),
+    so it is excluded from decode identity: a decode recording serves any
+    prompt length."""
+    static = {"kind": kind, "cache_len": cache_len, "block_k": block_k,
+              "batch": batch}
+    if kind == "prefill":
+        static["seq"] = seq
+    return static
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--kinds", default="prefill,decode")
     ap.add_argument("--out", default="/tmp/recordings")
+    ap.add_argument("--registry", default=None,
+                    help="registry root (default: <out>/registry)")
+    ap.add_argument("--no-registry", action="store_true",
+                    help="skip registry publishing (flat files only)")
     ap.add_argument("--key", default="cody-demo-key")
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--block-k", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode batch = number of serving slots (match "
+                         "serve --slots)")
+    ap.add_argument("--prefill-batch", type=int, default=1,
+                    help="prefill batch (default 1: the engine admits "
+                         "prompts per request, so serve fetches batch-1 "
+                         "prefill recordings)")
     ap.add_argument("--seq", type=int, default=32)
     args = ap.parse_args(argv)
 
@@ -59,23 +93,45 @@ def main(argv=None):
     if args.smoke:
         cfg = smoke_shrink(cfg)
     os.makedirs(args.out, exist_ok=True)
+    signing_key = args.key.encode()
+    service = None
+    if not args.no_registry:
+        registry_root = args.registry or os.path.join(args.out, "registry")
+        store = RecordingStore(registry_root, key=signing_key)
+        service = RegistryService(store, signing_key=signing_key)
     mesh = make_host_mesh(model=1)
+    mesh_fp = fingerprint(mesh_descriptor(mesh))
     rules = rules_for("serve", mesh.axis_names)
     for kind in args.kinds.split(","):
+        # --batch sizes the decode step (the serving slot count); prefill
+        # defaults to batch=1, the engine's per-request admission shape
+        batch = args.prefill_batch if kind == "prefill" else args.batch
+        static = static_meta_for(kind, cache_len=args.cache_len,
+                                 block_k=args.block_k, batch=batch,
+                                 seq=args.seq)
         fn, specs, donate = build_step(
             cfg, kind, rules, cache_len=args.cache_len,
-            block_k=args.block_k, batch=args.batch, seq=args.seq)
-        rec = record(f"{args.arch}:{kind}", fn, specs, mesh=mesh,
+            block_k=args.block_k, batch=batch, seq=args.seq)
+        # config fingerprint is part of recording identity: two sizes of
+        # one arch (e.g. smoke-shrunk vs full) must never share a key
+        key = key_for(args.arch, kind,
+                      {**static, "config_fp": cfg.fingerprint()}, mesh_fp)
+        rec = record(key, fn, specs, mesh=mesh,
                      donate_argnums=donate,
                      config_fingerprint=cfg.fingerprint(),
-                     static_meta={"kind": kind, "cache_len": args.cache_len,
-                                  "block_k": args.block_k,
-                                  "batch": args.batch, "seq": args.seq})
+                     static_meta=static)
         path = os.path.join(args.out, recording_name(args.arch, kind))
-        rec.save(path, args.key.encode())
-        print(f"recorded {kind}: {path} "
-              f"({len(rec.payload)/1e3:.1f} kB executable, "
-              f"{rec.manifest['record_wall_s']:.1f}s record time)")
+        rec.save(path, signing_key)
+        line = (f"recorded {kind}: {path} "
+                f"({len(rec.payload)/1e3:.1f} kB executable, "
+                f"{rec.manifest['record_wall_s']:.1f}s record time)")
+        if service is not None:
+            pub = service.publish(key, rec)
+            line += (f"; published {key} v{pub['version']} "
+                     f"({pub['wire_bytes']/1e3:.1f} kB wire, "
+                     f"{pub['chunks_new']} new / "
+                     f"{pub['chunks_reused']} reused chunks)")
+        print(line)
 
 
 if __name__ == "__main__":

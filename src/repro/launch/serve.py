@@ -1,9 +1,14 @@
 """Serving driver: continuous batching with fused-block decode, speculative
 continuation, and (optionally) execution purely from signed recordings —
-the paper's in-TEE replay mode.
+the paper's in-TEE replay mode.  Recordings come from a flat directory
+(``--from-recordings``) or from the content-addressed registry
+(``--from-registry``), the latter with chunked/resumable fetch over an
+emulated network and collaborative record-on-miss.
 
     python -m repro.launch.serve --arch qwen2.5-3b --smoke --requests 8
     python -m repro.launch.serve --from-recordings /tmp/recordings --key k
+    python -m repro.launch.serve --from-registry /tmp/recordings/registry \
+        --net wifi --record-on-miss --key k
 """
 from __future__ import annotations
 
@@ -22,27 +27,104 @@ from repro.sharding import rules_for
 from repro.training import steps as ST
 
 
+def _registry_replayer(cfg, mesh, rules, *, registry_dir: str, key: bytes,
+                       n_slots: int, cache_len: int, block_k: int,
+                       netem=None, record_on_miss: bool = False,
+                       rec_seq: int = 16):
+    """Boot a Replayer from the registry: fetch-by-key (chunked, resumable,
+    netem-billed), verify, preload + warm — a replica boots from a registry
+    hit without recompiling.  On miss, ``record_on_miss`` records through
+    the service's single-flight lease with THIS engine's exact shapes."""
+    from repro.core.attest import fingerprint
+    from repro.core.recorder import (mesh_descriptor, record,
+                                     topology_fingerprint)
+    from repro.core.replay import Replayer
+    from repro.launch.record import build_step, static_meta_for
+    from repro.registry import (RegistryClient, RegistryService,
+                                RecordingStore, key_arch, key_for)
+
+    store = RecordingStore(registry_dir, key=key)
+    service = RegistryService(store, signing_key=key)
+    client = RegistryClient(service, netem=netem, key=key)
+    mesh_fp = fingerprint(mesh_descriptor(mesh))
+    config_fp = cfg.fingerprint()
+    topo = topology_fingerprint()
+
+    def _usable(fk: str, static: dict) -> bool:
+        """An alternate published shape of this workload is substitutable
+        iff the engine-visible shapes agree (prefill seq may differ: the
+        engine adapts via fixed_prompt_len; decode ignores seq) AND it was
+        recorded for this exact model config and hardware topology — a
+        foreign-host or differently-sized recording would only fail later
+        with TopologyMismatch/ReplayArgumentError."""
+        meta = store.entry(fk)["meta"]
+        static_meta = meta.get("static", {})
+        return (all(static_meta.get(f) == static[f]
+                    for f in ("batch", "cache_len", "block_k"))
+                and meta.get("config_fingerprint", "") == config_fp
+                and meta.get("topology", "") == topo)
+
+    items = []
+    for kind in ("prefill", "decode"):
+        static = static_meta_for(
+            kind, cache_len=cache_len, block_k=block_k,
+            batch=1 if kind == "prefill" else n_slots, seq=rec_seq)
+        reg_key = key_for(cfg.name, kind, {**static, "config_fp": config_fp},
+                          mesh_fp)
+        record_fn = None
+        if not service.has(reg_key):
+            found = [fk for fk in store.find(f"{key_arch(cfg.name)}/{kind}/")
+                     if _usable(fk, static)]
+            if found:
+                # most recently published alternate wins — find() sorts by
+                # key hash, which would make the choice arbitrary
+                reg_key = max(found, key=lambda fk: store.entry(fk)["meta"]
+                              .get("published_s", 0.0))
+            elif record_on_miss:
+                def record_fn(kind=kind, static=static, reg_key=reg_key):
+                    fn, specs, donate = build_step(
+                        cfg, kind, rules, cache_len=cache_len,
+                        block_k=block_k, batch=static["batch"],
+                        seq=static.get("seq", rec_seq))
+                    return record(reg_key, fn, specs, mesh=mesh,
+                                  donate_argnums=donate,
+                                  config_fingerprint=cfg.fingerprint(),
+                                  static_meta=static)
+        items.append((reg_key, record_fn))
+    rp = Replayer(key=key)
+    pre, dec = client.into_replayer(rp, items, warm=True)
+    return rp, pre, dec, client
+
+
 def build_engine(cfg, *, n_slots: int, cache_len: int, block_k: int,
                  eos_id: int, params=None, recordings_dir: str = "",
+                 registry_dir: str = "", record_on_miss: bool = False,
                  key: bytes = b"", netem=None, speculate=True,
                  pipeline_depth: int = 4) -> Engine:
     mesh = make_host_mesh(model=1)
     rules = rules_for("serve", mesh.axis_names)
     batched_prefill = None
     fixed_prompt_len = None
+    registry_client = None
     if cfg.family in ("ssm", "hybrid"):
         # recurrent state is not position-indexed: dropped pipeline tails
         # cannot be re-executed against an already-advanced state, so the
         # engine's metastate-only rollback is unsound here
         speculate = False
-    if recordings_dir:
+    if registry_dir:
+        rp, pre, dec, registry_client = _registry_replayer(
+            cfg, mesh, rules, registry_dir=registry_dir, key=key,
+            n_slots=n_slots, cache_len=cache_len, block_k=block_k,
+            netem=netem, record_on_miss=record_on_miss)
+        prefill_fn = lambda p, b: rp.execute(pre, p, b)
+        decode_fn = lambda p, t, po, c: rp.execute(dec, p, t, po, c)
+        fixed_prompt_len = rp.manifest(pre)["static"].get("seq")
+    elif recordings_dir:
         from repro.core.replay import Replayer
         from repro.launch.record import recording_name
         rp = Replayer(key=key)
-        pre = rp.load(f"{recordings_dir}/{recording_name(cfg.name, 'prefill')}"
-                      .replace(cfg.name, cfg.name.replace("-smoke", "")))
-        dec = rp.load(f"{recordings_dir}/{recording_name(cfg.name, 'decode')}"
-                      .replace(cfg.name, cfg.name.replace("-smoke", "")))
+        pre = rp.load(f"{recordings_dir}/{recording_name(cfg.name, 'prefill')}")
+        dec = rp.load(f"{recordings_dir}/{recording_name(cfg.name, 'decode')}")
         rp.warm(dec)   # decode joins the async pipeline with no cold start
         prefill_fn = lambda p, b: rp.execute(pre, p, b)
         decode_fn = lambda p, t, po, c: rp.execute(dec, p, t, po, c)
@@ -68,6 +150,7 @@ def build_engine(cfg, *, n_slots: int, cache_len: int, block_k: int,
                  speculate=speculate, pipeline_depth=pipeline_depth,
                  batched_prefill_fn=batched_prefill)
     eng.fixed_prompt_len = fixed_prompt_len
+    eng.registry_client = registry_client
     return eng
 
 
@@ -83,6 +166,14 @@ def main(argv=None):
     ap.add_argument("--no-speculate", action="store_true")
     ap.add_argument("--pipeline-depth", type=int, default=4)
     ap.add_argument("--from-recordings", default="")
+    ap.add_argument("--from-registry", default="",
+                    help="registry root to fetch recordings from")
+    ap.add_argument("--record-on-miss", action="store_true",
+                    help="on registry miss, record through the service's "
+                         "single-flight lease")
+    ap.add_argument("--net", default="none",
+                    choices=["none", "wifi", "cellular", "local"],
+                    help="emulated network profile for registry fetches")
     ap.add_argument("--key", default="cody-demo-key")
     args = ap.parse_args(argv)
 
@@ -90,12 +181,22 @@ def main(argv=None):
     if args.smoke:
         cfg = smoke_shrink(cfg)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    netem = None
+    if args.net != "none":
+        from repro.core.netem import CELLULAR, LOCAL, WIFI, NetworkEmulator
+        netem = NetworkEmulator(
+            {"wifi": WIFI, "cellular": CELLULAR, "local": LOCAL}[args.net])
     eng = build_engine(cfg, n_slots=args.slots, cache_len=args.cache_len,
                        block_k=args.block_k, eos_id=2, params=params,
                        recordings_dir=args.from_recordings,
-                       key=args.key.encode(),
+                       registry_dir=args.from_registry,
+                       record_on_miss=args.record_on_miss,
+                       key=args.key.encode(), netem=netem,
                        speculate=not args.no_speculate,
                        pipeline_depth=args.pipeline_depth)
+    # registry boot traffic, snapshotted BEFORE the engine starts billing
+    # its own commit round trips into the same emulated link
+    registry_net = dict(netem.snapshot()) if netem is not None else None
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = eng.fixed_prompt_len or int(rng.integers(4, 16))
@@ -108,6 +209,11 @@ def main(argv=None):
           f"({toks/dt:.0f} tok/s)")
     print("engine stats:", dict(eng.stats))
     print("speculator:", dict(eng.spec.stats))
+    if eng.registry_client is not None:
+        print("registry client:", dict(eng.registry_client.stats))
+        if registry_net is not None:
+            print("registry net (boot):", registry_net)
+            print("total net (boot + serve):", netem.snapshot())
     return outs, eng
 
 

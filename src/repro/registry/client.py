@@ -1,0 +1,178 @@
+"""Registry client — the device (TEE) side of the recording registry.
+
+All traffic is billed to a ``NetworkEmulator`` so the benchmarks report
+the real byte/RTT cost per profile (wifi/cellular):
+
+  * one blocking round trip for the index/lease RPC;
+  * a miss with record-on-miss blocks on the cloud's single-flight lease:
+    the recorder's wall time is added to virtual time (this is the cold
+    cost a warm hit avoids) and counted in ``stats['recording_round_trips']``;
+  * chunk downloads go through ``NetworkEmulator.transfer`` — pipelined,
+    ack-accounted, billed only for chunks the client does not already
+    hold (the chunk cache is content-addressed, so after a delta
+    re-publish a refetch downloads only the changed chunks).
+
+Fetches are RESUMABLE: received chunks live in a byte-bounded LRU keyed
+by content address, so an interrupted fetch retries with only the
+missing remainder.
+
+Security: the client verifies the recording HMAC (``Recording.from_bytes``
+with a key — never ``allow_unsigned``) BEFORE the bytes can reach any
+``pickle.loads``; the store additionally re-verifies every chunk digest
+and the signed index on each read.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable, Dict, Iterable, List, Optional, Tuple, Union
+
+from repro.core.recording import Recording
+from repro.registry.service import RegistryService, parts_to_recording_bytes
+from repro.registry.store import LRUBytes, RegistryMissError
+
+_INDEX_RPC_SEND = 96          # key + auth token
+_INDEX_RPC_RECV_BASE = 64     # entry header
+_INDEX_RPC_RECV_PER_CHUNK = 48  # digest + sizes per chunk row
+
+
+class FetchInterrupted(RuntimeError):
+    """A chunked fetch was cut off mid-stream; already-received chunks are
+    cached, so retrying the fetch resumes where it stopped."""
+
+
+class RegistryClient:
+    def __init__(self, service: RegistryService, netem=None, *, key: bytes,
+                 cache_bytes: int = 32 << 20):
+        if not key:
+            raise ValueError("RegistryClient requires the registry signing "
+                             "key: fetched bytes are verified before use")
+        self._svc = service
+        self._net = netem
+        self._key = key
+        self.chunks = LRUBytes(cache_bytes)   # digest -> raw chunk
+        self.stats = collections.Counter()
+
+    # ---------------------------------------------------------- internals --
+    def _bill_index_rpc(self, n_chunks: int):
+        if self._net is not None:
+            self._net.round_trip(
+                send_bytes=_INDEX_RPC_SEND,
+                recv_bytes=_INDEX_RPC_RECV_BASE +
+                _INDEX_RPC_RECV_PER_CHUNK * n_chunks)
+
+    def _missing_rows(self, entry: dict) -> List[dict]:
+        """Chunk rows not in the local cache, deduplicated by digest — a
+        digest repeated across index rows (e.g. identical zero pages)
+        crosses the wire once."""
+        seen, rows = set(), []
+        for c in entry["chunks"]:
+            if c["d"] not in self.chunks and c["d"] not in seen:
+                seen.add(c["d"])
+                rows.append(c)
+        return rows
+
+    def _download(self, chunk_rows: List[dict],
+                  stat_key: str = "chunks_fetched",
+                  cache: bool = True) -> Dict[str, bytes]:
+        """Pull the given chunks, billing ONE pipelined transfer for their
+        total compressed size.  ``cache=False`` keeps the result out of
+        the LRU (refetches of evicted chunks must not thrash it) and
+        returns the raw bytes instead."""
+        out: Dict[str, bytes] = {}
+        if not chunk_rows:
+            return out
+        if self._net is not None:
+            self._net.transfer(sum(c["c"] for c in chunk_rows),
+                               chunk_size=self._svc.chunk_size,
+                               direction="recv")
+        for c in chunk_rows:
+            raw = self._svc.read_chunk(c["d"])
+            if cache:
+                self.chunks.put(c["d"], raw)
+            else:
+                out[c["d"]] = raw
+            self.stats[stat_key] += 1
+            self.stats["chunk_bytes_fetched"] += c["c"]
+        return out
+
+    # ------------------------------------------------------------- public --
+    def fetch(self, key: str,
+              record_fn: Optional[Callable[[], Recording]] = None,
+              interrupt_after: Optional[int] = None) -> bytes:
+        """Fetch-and-verify a recording; returns the verified wire bytes.
+
+        ``record_fn`` enables record-on-miss (single-flight on the cloud
+        side).  ``interrupt_after=k`` aborts after k newly received chunks
+        with ``FetchInterrupted`` — the test/demo hook for resumability.
+        """
+        if not self._svc.has(key):
+            if record_fn is None:
+                self._bill_index_rpc(0)
+                raise RegistryMissError(key)
+            # blocking record-on-miss RPC: the client stalls for the
+            # cloud's record (or for another client's in-flight lease);
+            # ensure() publishes without reassembling — the chunks cross
+            # the wire exactly once, in the billed download below
+            self._svc.ensure(key, record_fn)
+            entry = self._svc.entry(key)
+            self._bill_index_rpc(len(entry["chunks"]))
+            self.stats["recording_round_trips"] += 1
+            if self._net is not None:
+                self._net.virtual_time_s += \
+                    float(entry["meta"].get("record_wall_s", 0.0))
+        else:
+            entry = self._svc.entry(key)
+            self._bill_index_rpc(len(entry["chunks"]))
+            self.stats["registry_hits"] += 1
+
+        missing = self._missing_rows(entry)
+        if interrupt_after is not None and len(missing) > interrupt_after:
+            self._download(missing[:interrupt_after])
+            raise FetchInterrupted(
+                f"fetch of '{key}' interrupted: "
+                f"{interrupt_after}/{len(missing)} missing chunks received "
+                f"(resume by fetching again)")
+        self._download(missing)
+
+        # chunks the LRU evicted mid-fetch (cache smaller than the
+        # recording) must cross the wire AGAIN — billed, and kept out of
+        # the cache to avoid thrashing it
+        extra = self._download(self._missing_rows(entry),
+                               stat_key="chunks_refetched", cache=False)
+
+        parts: Dict[str, List[bytes]] = {}
+        for c in entry["chunks"]:
+            raw = extra.get(c["d"])
+            if raw is None:
+                raw = self.chunks.get(c["d"])
+            if raw is None:
+                # evicted between the refetch scan and here (only possible
+                # with a concurrently shared cache) — still billed
+                raw = self._download([c], stat_key="chunks_refetched",
+                                     cache=False)[c["d"]]
+            parts.setdefault(c["part"], []).append(raw)
+        blob = parts_to_recording_bytes(
+            {p: b"".join(pieces) for p, pieces in parts.items()})
+        # HMAC verification BEFORE the blob can reach pickle.loads anywhere
+        Recording.from_bytes(blob, self._key)
+        self.stats["verified_fetches"] += 1
+        return blob
+
+    def into_replayer(self, replayer,
+                      keys: Iterable[Union[str, Tuple[str, Optional[
+                          Callable[[], Recording]]]]],
+                      warm: bool = True) -> List[str]:
+        """Warm handoff: fetch + verify each key, preload into a
+        ``Replayer`` under the registry key as the executable-cache name,
+        and (optionally) warm-execute so a replica boots from a registry
+        hit without recompiling — the first real request pays neither
+        compile nor cold-start cost."""
+        items = []
+        for it in keys:
+            key, record_fn = it if isinstance(it, tuple) else (it, None)
+            items.append((self.fetch(key, record_fn), key))
+        names = replayer.preload(items)
+        if warm:
+            for name in names:
+                replayer.warm(name)
+        return names

@@ -1,0 +1,178 @@
+"""Registry service — the CODY cloud side of the recording registry.
+
+Responsibilities:
+  * fetch-by-key: reassemble a published recording from the
+    content-addressed store (integrity re-verified by the store);
+  * record-on-miss with SINGLE-FLIGHT leases: N concurrent clients
+    requesting the same (arch, kind, shapes, mesh) key trigger exactly one
+    ``recorder.record()`` — the first requester takes the lease and
+    records, the rest block on it and reuse the published result (the
+    whole point of record-once/replay-everywhere: the expensive dryrun
+    happens once per key, fleet-wide);
+  * delta publishing: consecutive versions of a key go through one
+    ``metasync.DeltaSync`` instance per key, so a re-record after a config
+    tweak ships only the changed parts (typically manifest + signature —
+    the payload chunks dedupe by content address in the store too).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+import msgpack
+import numpy as np
+
+from repro.core.attest import TamperedRecordingError, verify
+from repro.core.metasync import DeltaSync
+from repro.core.recording import Recording
+from repro.registry.store import (RecordingStore, RegistryMissError,
+                                  split_chunks)
+
+
+def recording_to_parts(rec: Recording, chunk_size: int) -> Dict[str, bytes]:
+    """Recording -> ordered, path-keyed byte sections.  The payload is
+    pre-split at chunk boundaries so a payload-local change invalidates
+    only its own chunks (chunking the whole serialized blob would let a
+    one-byte manifest edit shift — and re-address — every payload chunk)."""
+    parts = {"manifest": msgpack.packb(rec.manifest, use_bin_type=True)}
+    for i, chunk in enumerate(split_chunks(rec.payload, chunk_size)):
+        parts[f"payload/{i:06d}"] = chunk
+    parts["trees"] = rec.trees
+    parts["signature"] = rec.signature.encode()
+    return parts
+
+
+def parts_to_recording_bytes(parts: Dict[str, bytes]) -> bytes:
+    """Inverse of ``recording_to_parts`` — a wire-format recording blob
+    (the caller still verifies its HMAC before trusting it)."""
+    missing = [k for k in ("manifest", "trees", "signature")
+               if k not in parts]
+    if missing:
+        raise RegistryMissError(f"incomplete parts, missing {missing}")
+    try:
+        manifest = msgpack.unpackb(parts["manifest"], raw=False)
+        payload = b"".join(parts[k] for k in sorted(parts)
+                           if k.startswith("payload/"))
+        rec = Recording(manifest, payload, parts["trees"],
+                        parts["signature"].decode())
+    except Exception as e:
+        raise TamperedRecordingError(f"unparseable registry parts: {e}")
+    return rec.to_bytes()
+
+
+class RegistryService:
+    """Cloud registry front end over a ``RecordingStore``."""
+
+    def __init__(self, store: RecordingStore, *, signing_key: bytes):
+        self._store = store
+        self._key = signing_key
+        self._delta: Dict[str, DeltaSync] = {}
+        self._lock = threading.Lock()
+        self._leases: Dict[str, threading.Event] = {}
+        self.stats = collections.Counter()
+
+    # ------------------------------------------------------------ publish --
+    def publish(self, key: str, rec: Recording) -> dict:
+        """Publish a SIGNED recording under ``key``; returns wire stats.
+        ``wire_bytes`` is what a delta upload ships (DeltaSync: only parts
+        whose digest changed since the last version of this key);
+        ``full_bytes`` is the naive full publish."""
+        if not rec.signature:
+            raise ValueError("publish requires a signed recording "
+                             "(call rec.sign_with(key) first)")
+        if not verify(rec.signable(), rec.signature, self._key):
+            raise TamperedRecordingError(
+                f"refusing to publish '{key}': signature does not verify "
+                "under the registry key")
+        parts = recording_to_parts(rec, self._store.chunk_size)
+        ds = self._delta.setdefault(key, DeltaSync())
+        sent_before = ds.stats["leaves_sent"]
+        wire = ds.pack({p: np.frombuffer(b, np.uint8) for p, b in
+                        parts.items()})
+        entry = self._store.put(key, parts, meta={
+            "name": rec.manifest.get("name", key),
+            "static": rec.manifest.get("static", {}),
+            # identity fields clients filter alternates by: a recording is
+            # only substitutable on matching hardware and model config
+            "topology": rec.manifest.get("topology", ""),
+            "config_fingerprint": rec.manifest.get("config_fingerprint", ""),
+            "record_wall_s": rec.manifest.get("record_wall_s", 0.0),
+            "published_s": time.time()})
+        self.stats["publishes"] += 1
+        return {"key": key, "version": entry["version"],
+                "full_bytes": sum(len(b) for b in parts.values()),
+                "wire_bytes": len(wire),
+                "parts_sent": ds.stats["leaves_sent"] - sent_before,
+                "chunks_new": entry["chunks_new"],
+                "chunks_reused": entry["chunks_reused"]}
+
+    # -------------------------------------------------------------- fetch --
+    def fetch_bytes(self, key: str) -> bytes:
+        self.stats["fetches"] += 1
+        return parts_to_recording_bytes(self._store.get(key))
+
+    def ensure(self, key: str,
+               record_fn: Optional[Callable[[], Recording]] = None) -> None:
+        """Make ``key`` present, running ``record_fn`` under a
+        single-flight lease on miss: concurrent missers block on the
+        leaseholder's event and reuse the published result — exactly one
+        record() per key no matter how many clients race.  Does NOT
+        reassemble the recording (clients pull chunks themselves)."""
+        with self._lock:
+            # only the hit/lease decision happens under the global lock;
+            # publishing/fetching must not serialize unrelated clients —
+            # the store has its own lock
+            if self._store.has(key):
+                self.stats["hits"] += 1
+                return
+            lease = self._leases.get(key)
+            if lease is None:
+                lease = self._leases[key] = threading.Event()
+                owner = True
+            else:
+                owner = False
+        if not owner:
+            self.stats["lease_waits"] += 1
+            lease.wait()
+            if not self._store.has(key):
+                raise RegistryMissError(
+                    f"record-on-miss for '{key}' failed on the leaseholder")
+            return
+        try:
+            if record_fn is None:
+                raise RegistryMissError(
+                    f"'{key}' not in registry and no record_fn provided")
+            rec = record_fn()
+            if not rec.signature:
+                rec.sign_with(self._key)
+            self.stats["records"] += 1
+            self.publish(key, rec)
+        finally:
+            with self._lock:
+                self._leases.pop(key, None)
+            lease.set()
+
+    def get_or_record(self, key: str,
+                      record_fn: Optional[Callable[[], Recording]] = None
+                      ) -> bytes:
+        self.ensure(key, record_fn)
+        return self.fetch_bytes(key)
+
+    # ------------------------------------------------- store passthroughs --
+    @property
+    def chunk_size(self) -> int:
+        return self._store.chunk_size
+
+    def has(self, key: str) -> bool:
+        return self._store.has(key)
+
+    def entry(self, key: str) -> dict:
+        return self._store.entry(key)
+
+    def find(self, prefix: str):
+        return self._store.find(prefix)
+
+    def read_chunk(self, digest: str) -> bytes:
+        return self._store.read_chunk(digest)

@@ -1,6 +1,7 @@
-"""CODY core: deferral / speculation / metasync / recording — unit +
-hypothesis property tests on the system's invariants."""
+"""CODY core: deferral / speculation / metasync / netem / recording — unit
++ hypothesis property tests on the system's invariants."""
 import os
+import pickle
 import tempfile
 
 import jax
@@ -244,3 +245,110 @@ def test_recording_embeds_cost_and_topology():
     assert "topology" in rec.manifest
     assert rec.manifest["inputs"][0]["shape"] == [4, 4]
     assert "flops" in rec.manifest["cost"] or rec.manifest["cost"] == {}
+
+
+def _flip_mid_byte(b: bytes) -> bytes:
+    ba = bytearray(b)
+    ba[len(ba) // 2] ^= 0x5A
+    return bytes(ba)
+
+
+def test_recording_tamper_matrix():
+    """Trust boundary: a change to ANY section — manifest, payload, trees,
+    signature — must surface as TamperedRecordingError on load."""
+    key = b"matrix-key"
+    rec = Recording({"name": "t", "static": {"cache_len": 64}},
+                    b"\x01\x02" * 700,
+                    pickle.dumps((None, None))).sign_with(key)
+    assert Recording.from_bytes(rec.to_bytes(), key).manifest == rec.manifest
+    mutations = {
+        "manifest": lambda r: r.manifest.__setitem__(
+            "static", {"cache_len": 9999}),
+        "payload": lambda r: setattr(r, "payload", _flip_mid_byte(r.payload)),
+        "trees": lambda r: setattr(r, "trees", _flip_mid_byte(r.trees)),
+        "signature": lambda r: setattr(
+            r, "signature",
+            ("0" if r.signature[0] != "0" else "1") + r.signature[1:]),
+    }
+    for section, mutate in mutations.items():
+        tampered = Recording(dict(rec.manifest), rec.payload, rec.trees,
+                             rec.signature)
+        mutate(tampered)
+        with pytest.raises(TamperedRecordingError):
+            Recording.from_bytes(tampered.to_bytes(), key)
+
+
+# ---------------------------------------------------------------- netem ----
+def test_netem_one_way_accounts_both_directions():
+    net = NetworkEmulator(WIFI)
+    net.one_way(1000)                        # default direction: send
+    assert (net.bytes_sent, net.bytes_received) == (1000, 0)
+    t1 = net.virtual_time_s
+    assert t1 == pytest.approx(WIFI.rtt_s / 2 + 1000 / WIFI.bw_bytes_s)
+    net.one_way_recv(500)                    # registry fetch direction
+    assert (net.bytes_sent, net.bytes_received) == (1000, 500)
+    assert net.virtual_time_s == pytest.approx(
+        t1 + WIFI.rtt_s / 2 + 500 / WIFI.bw_bytes_s)
+    with pytest.raises(ValueError):
+        net.one_way(1, direction="sideways")
+
+
+def test_netem_transfer_chunked_accounting():
+    """transfer(): one blocking RTT + bandwidth for payload and per-chunk
+    acks, billed to the right direction — registry fetch billing."""
+    for direction in ("recv", "send"):
+        net = NetworkEmulator(CELLULAR)
+        chunks = net.transfer(200_000, chunk_size=64_000, direction=direction)
+        assert chunks == 4                   # ceil(200000 / 64000)
+        acks = net.ACK_BYTES * chunks
+        payload_dir, ack_dir = (net.bytes_received, net.bytes_sent) \
+            if direction == "recv" else (net.bytes_sent, net.bytes_received)
+        assert (payload_dir, ack_dir) == (200_000, acks)
+        assert net.round_trips == 1
+        assert net.virtual_time_s == pytest.approx(
+            CELLULAR.rtt_s + (200_000 + acks) / CELLULAR.bw_bytes_s)
+    assert NetworkEmulator(WIFI).transfer(0) == 0   # nothing billed
+
+
+# ------------------------------------------------- metasync round trips ----
+def test_metasync_delta_roundtrip_bit_exact():
+    """split -> DeltaSync -> merge reproduces the original pytree
+    bit-exactly, including the no-change fast path (registry delta
+    publishing leans on exactly this)."""
+    rng = np.random.default_rng(7)
+    tree = {"step": np.int32(3),
+            "pos": rng.integers(0, 50, 8).astype(np.int32),
+            "w": rng.normal(size=(64, 64)).astype(np.float32),
+            "nested": {"rng_key": rng.integers(0, 2**31, 2).astype(np.uint32)}}
+    meta, data = split(tree)
+    ds = DeltaSync()
+    wire1 = ds.pack(meta)
+    restored = DeltaSync.unpack(wire1, {})     # first sync ships everything
+    assert set(restored) == set(meta)
+    rebuilt = merge(tree, restored, data)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(rebuilt)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    # no-change fast path: zero leaves shipped, base reproduced bit-exactly
+    sent = ds.stats["leaves_sent"]
+    wire2 = ds.pack(meta)
+    assert ds.stats["leaves_sent"] == sent
+    assert len(wire2) < len(wire1)
+    restored2 = DeltaSync.unpack(wire2, restored)
+    for k in meta:
+        assert np.array_equal(np.asarray(restored2[k]), np.asarray(meta[k]))
+
+    # single-leaf change: only that leaf crosses the wire, merge is exact
+    pos_key = next(k for k in meta if "pos" in k)
+    meta2 = dict(meta, **{pos_key: np.asarray(meta[pos_key]) + 1})
+    wire3 = ds.pack(meta2)
+    assert ds.stats["leaves_sent"] == sent + 1
+    restored3 = DeltaSync.unpack(wire3, restored2)
+    rebuilt3 = merge(tree, restored3, data)
+    flat3 = {k: v for k, v in zip(meta, [restored3[k] for k in meta])}
+    assert np.array_equal(np.asarray(flat3[pos_key]),
+                          np.asarray(meta[pos_key]) + 1)
+    for a, b in zip(jax.tree.leaves(merge(tree, meta2, data)),
+                    jax.tree.leaves(rebuilt3)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))

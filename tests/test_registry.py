@@ -1,0 +1,423 @@
+"""Recording registry: content-addressed store, single-flight
+record-on-miss service, netem-billed resumable client, trust boundary."""
+import os
+import pickle
+import tempfile
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attest import UnverifiedRecordingError
+from repro.core.netem import WIFI, NetworkEmulator
+from repro.core.recorder import record
+from repro.core.recording import Recording, TamperedRecordingError
+from repro.core.replay import Replayer
+from repro.registry import (FetchInterrupted, LRUBytes, RecordingStore,
+                            RegistryClient, RegistryIntegrityError,
+                            RegistryMissError, RegistryService, key_arch,
+                            key_for)
+
+KEY = b"registry-test-key"
+
+
+@pytest.fixture(scope="module")
+def real_recording():
+    """One real (compiled) recording shared by the module's tests."""
+    def fn(x):
+        return jnp.tanh(x) * 2.0
+
+    rec = record("unit/tanh/abc", fn,
+                 (jax.ShapeDtypeStruct((16,), jnp.float32),))
+    rec.sign_with(KEY)
+    return rec
+
+
+def synthetic_recording(payload_bytes: int = 200_000, seed: int = 0,
+                        static=None) -> Recording:
+    """Signed recording with an incompressible payload (no compile cost);
+    enough chunks at chunk_size=32k to exercise chunked/resumable paths."""
+    rng = np.random.default_rng(seed)
+    manifest = {"name": "synthetic", "static": static or {},
+                "record_wall_s": 2.0}
+    return Recording(manifest, rng.bytes(payload_bytes),
+                     pickle.dumps((None, None))).sign_with(KEY)
+
+
+def make_registry(root=None, chunk_size=32 * 1024):
+    store = RecordingStore(root, key=KEY, chunk_size=chunk_size)
+    return store, RegistryService(store, signing_key=KEY)
+
+
+# ------------------------------------------------------------- key_for ----
+def test_key_for_is_deterministic_and_shape_sensitive():
+    shapes = {"kind": "decode", "batch": 4, "cache_len": 128}
+    k1 = key_for("qwen2.5-3b", "decode", shapes, "meshfp")
+    assert k1 == key_for("qwen2.5-3b", "decode", dict(shapes), "meshfp")
+    assert k1.startswith("qwen2.5-3b/decode/")
+    assert k1 != key_for("qwen2.5-3b", "decode", {**shapes, "batch": 8},
+                         "meshfp")
+    assert k1 != key_for("qwen2.5-3b", "decode", shapes, "other-mesh")
+
+
+def test_key_for_normalizes_smoke_suffix():
+    """Smoke-shrunk configs record AND replay under the base arch — the
+    one normalization point shared by record, serve, and the replayer."""
+    assert key_arch("qwen2.5-3b-smoke") == "qwen2.5-3b"
+    assert key_for("qwen2.5-3b-smoke", "prefill", {}, "m") == \
+        key_for("qwen2.5-3b", "prefill", {}, "m")
+
+
+# --------------------------------------------------------------- store ----
+def test_store_roundtrip_dedup_and_gc():
+    rec = synthetic_recording()
+    with tempfile.TemporaryDirectory() as d:
+        store, svc = make_registry(d)
+        s1 = svc.publish("a/b/c", rec)
+        assert svc.fetch_bytes("a/b/c") == rec.to_bytes()
+        assert s1["chunks_new"] > 3 and s1["chunks_reused"] == 0
+
+        # identical re-publish: every chunk deduplicated by content address
+        s2 = svc.publish("a/b/c", rec)
+        assert s2["chunks_new"] == 0
+        assert s2["chunks_reused"] == s1["chunks_new"]
+        assert s2["version"] == 2
+
+        # a different key sharing the payload reuses its chunks too
+        rec2 = Recording(dict(rec.manifest, name="other"), rec.payload,
+                         rec.trees).sign_with(KEY)
+        s3 = svc.publish("a/b/other", rec2)
+        # payload + trees chunks shared; only manifest + signature are new
+        assert s3["chunks_reused"] == s1["chunks_new"] - 2
+        assert s3["chunks_new"] == 2
+
+        # delete + gc drops chunks referenced by no entry
+        store.delete("a/b/other")
+        store.delete("a/b/c")
+        assert store.gc() > 0
+        with pytest.raises(RegistryMissError):
+            store.get("a/b/c")
+
+
+def test_store_reverifies_chunks_on_every_read():
+    rec = synthetic_recording()
+    with tempfile.TemporaryDirectory() as d:
+        store, svc = make_registry(d)
+        svc.publish("k", rec)
+        digest = store.entry("k")["chunks"][1]["d"]
+        path = store._chunk_path(digest)
+        blob = bytearray(open(path, "rb").read())
+        blob[len(blob) // 2] ^= 0x5A
+        open(path, "wb").write(bytes(blob))
+        with pytest.raises(RegistryIntegrityError):
+            store.get("k")
+
+
+def test_store_index_signature_enforced():
+    rec = synthetic_recording()
+    with tempfile.TemporaryDirectory() as d:
+        store, svc = make_registry(d)
+        svc.publish("k", rec)
+        # on-disk index tamper: flipping a byte breaks the HMAC at load
+        idx = os.path.join(d, "index.msgpack")
+        blob = bytearray(open(idx, "rb").read())
+        blob[len(blob) // 3] ^= 0xFF
+        open(idx, "wb").write(bytes(blob))
+        with pytest.raises((RegistryIntegrityError, TamperedRecordingError)):
+            RecordingStore(d, key=KEY)
+        # in-memory entry mutation: caught by the per-read signature check
+        store2, _ = make_registry()
+        _, svc2 = store2, RegistryService(store2, signing_key=KEY)
+        svc2.publish("k", rec)
+        store2._entries["k"]["total"] += 1
+        with pytest.raises(RegistryIntegrityError):
+            store2.get("k")
+
+
+def test_shared_root_publishes_merge_across_store_handles():
+    """Two store handles on one filesystem root (e.g. the record CLI and
+    a long-lived serve process): a publish through one must not erase
+    keys the other published meanwhile — mutations are read-modify-write
+    against the on-disk index, not last-writer-wins."""
+    rec = synthetic_recording(payload_bytes=40_000)
+    with tempfile.TemporaryDirectory() as d:
+        store_a, svc_a = make_registry(d)
+        store_b, svc_b = make_registry(d)     # opened before any publish
+        svc_a.publish("from/a/1", rec)
+        svc_b.publish("from/b/1", rec)        # b must pick up a's entry
+        assert store_b.has("from/a/1") and store_b.has("from/b/1")
+        assert store_a.has("from/b/1")        # a re-reads the shared index
+        assert svc_a.fetch_bytes("from/b/1") == rec.to_bytes()
+        fresh, _ = make_registry(d)
+        assert set(fresh.keys()) == {"from/a/1", "from/b/1"}
+
+
+def test_lru_chunk_cache_is_byte_bounded():
+    cache = LRUBytes(max_bytes=10_000)
+    blobs = {f"d{i}": bytes(3_000) for i in range(8)}
+    for dg, b in blobs.items():
+        cache.put(dg, b)
+    assert cache.nbytes <= 10_000
+    assert cache.stats["evictions"] >= 4
+    assert "d7" in cache and "d0" not in cache      # LRU order
+    cache.get("d6")
+    cache.put("dx", bytes(3_000))                   # evicts d5, not d6
+    assert "d6" in cache and "d5" not in cache
+
+
+# ------------------------------------------------- single-flight lease ----
+def test_single_flight_eight_concurrent_misses_one_record():
+    """Acceptance: 8 concurrent misses on one key cause exactly ONE
+    record() call, and all 8 clients end with the same verified bytes."""
+    _store, svc = make_registry()
+    reg_key = key_for("arch", "decode", {"batch": 8}, "mesh")
+    record_calls = []
+    gate = threading.Barrier(8)
+
+    def record_fn():
+        record_calls.append(threading.get_ident())
+
+        def fn(x):
+            return x + 1.0
+
+        rec = record(reg_key, fn,
+                     (jax.ShapeDtypeStruct((4,), jnp.float32),))
+        return rec.sign_with(KEY)
+
+    results = [None] * 8
+    errors = []
+
+    def client_thread(i):
+        try:
+            gate.wait()        # maximize the race on the lease
+            cl = RegistryClient(svc, netem=NetworkEmulator(WIFI), key=KEY)
+            results[i] = cl.fetch(reg_key, record_fn=record_fn)
+        except Exception as e:   # surfaced below; never swallow in-thread
+            errors.append(e)
+
+    threads = [threading.Thread(target=client_thread, args=(i,))
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(record_calls) == 1                   # exactly one record()
+    assert svc.stats["records"] == 1
+    assert all(r == results[0] for r in results)    # same bytes, all 8
+    for blob in results:
+        Recording.from_bytes(blob, KEY)             # each verifies
+
+
+def test_record_on_miss_failure_propagates_to_waiters():
+    _store, svc = make_registry()
+
+    def boom():
+        raise RuntimeError("compile exploded")
+
+    with pytest.raises(RuntimeError):
+        svc.get_or_record("k", boom)
+    assert not svc._leases                          # lease released
+    with pytest.raises(RegistryMissError):
+        svc.get_or_record("k", None)
+
+
+# -------------------------------------------------------------- client ----
+def test_client_resumable_fetch_and_byte_accounting():
+    rec = synthetic_recording(payload_bytes=6 * 32 * 1024)
+    _store, svc = make_registry(chunk_size=32 * 1024)
+    svc.publish("k", rec)
+    total_chunks = len(svc.entry("k")["chunks"])
+    total_comp = sum(c["c"] for c in svc.entry("k")["chunks"])
+
+    net = NetworkEmulator(WIFI)
+    cl = RegistryClient(svc, netem=net, key=KEY)
+    with pytest.raises(FetchInterrupted):
+        cl.fetch("k", interrupt_after=2)
+    assert cl.stats["chunks_fetched"] == 2
+    partial_rx = net.bytes_received
+    assert partial_rx < total_comp
+
+    blob = cl.fetch("k")                            # resume: remainder only
+    assert blob == rec.to_bytes()
+    assert cl.stats["chunks_fetched"] == total_chunks
+    assert cl.stats["chunk_bytes_fetched"] == total_comp
+    # all compressed bytes crossed the wire exactly once (plus index RPCs)
+    chunk_rx = net.bytes_received - 2 * (64 + 48 * total_chunks)
+    assert chunk_rx == total_comp
+
+    # a second fetch is free on the wire: every chunk is cached locally
+    net.reset()
+    assert cl.fetch("k") == blob
+    assert net.bytes_received == 64 + 48 * total_chunks   # index RPC only
+    assert net.round_trips == 1
+
+
+def test_record_and_serve_derive_identical_decode_keys():
+    """seq does not shape the decode step, so it must not enter decode
+    identity — otherwise the record CLI (seq=32) and serve (rec_seq=16)
+    would never key-match and every boot would re-record."""
+    from repro.launch.record import static_meta_for
+    s_record = static_meta_for("decode", cache_len=128, block_k=8, batch=4,
+                               seq=32)
+    s_serve = static_meta_for("decode", cache_len=128, block_k=8, batch=4,
+                              seq=16)
+    assert s_record == s_serve
+    assert key_for("a", "decode", s_record, "m") == \
+        key_for("a", "decode", s_serve, "m")
+    # prefill IS seq-shaped: different seq, different key
+    p32 = static_meta_for("prefill", cache_len=128, block_k=8, batch=1,
+                          seq=32)
+    p16 = static_meta_for("prefill", cache_len=128, block_k=8, batch=1,
+                          seq=16)
+    assert key_for("a", "prefill", p32, "m") != \
+        key_for("a", "prefill", p16, "m")
+
+
+def test_client_bills_chunks_evicted_mid_fetch():
+    """A cache smaller than the recording forces refetches during
+    reassembly — those bytes must be billed, not pulled for free."""
+    rec = synthetic_recording(payload_bytes=8 * 32 * 1024)
+    _store, svc = make_registry(chunk_size=32 * 1024)
+    svc.publish("k", rec)
+    total_comp = sum(c["c"] for c in svc.entry("k")["chunks"])
+    net = NetworkEmulator(WIFI)
+    cl = RegistryClient(svc, netem=net, key=KEY, cache_bytes=2 * 32 * 1024)
+    assert cl.fetch("k") == rec.to_bytes()
+    assert cl.stats["chunks_refetched"] > 0
+    # wire bytes cover the full download AND every evicted-chunk refetch
+    index_rx = 64 + 48 * len(svc.entry("k")["chunks"])
+    assert net.bytes_received >= index_rx + total_comp + \
+        cl.stats["chunks_refetched"]    # refetched chunks are >= 1 B each
+
+
+def test_client_miss_without_record_fn():
+    _store, svc = make_registry()
+    cl = RegistryClient(svc, netem=NetworkEmulator(WIFI), key=KEY)
+    with pytest.raises(RegistryMissError):
+        cl.fetch("nope")
+
+
+def test_delta_republish_ships_and_fetches_only_changed_chunks():
+    """A config-tweak re-record delta-publishes (DeltaSync) only changed
+    parts, and a client holding v1 refetches only the delta."""
+    rec = synthetic_recording(payload_bytes=5 * 32 * 1024)
+    _store, svc = make_registry(chunk_size=32 * 1024)
+    s1 = svc.publish("k", rec)
+    net = NetworkEmulator(WIFI)
+    cl = RegistryClient(svc, netem=net, key=KEY)
+    cl.fetch("k")
+
+    rec2 = Recording(dict(rec.manifest, static={"tweak": 1}), rec.payload,
+                     rec.trees).sign_with(KEY)
+    s2 = svc.publish("k", rec2)
+    assert s2["wire_bytes"] < s1["wire_bytes"] // 10   # manifest+sig only
+    assert s2["chunks_reused"] >= 5                    # payload untouched
+
+    net.reset()
+    blob2 = cl.fetch("k")
+    assert blob2 == rec2.to_bytes()
+    chunk_rx = net.bytes_received - (64 + 48 * len(svc.entry("k")["chunks"]))
+    assert chunk_rx < s1["full_bytes"] // 10           # delta fetch
+
+
+def test_warm_handoff_into_replayer(real_recording):
+    _store, svc = make_registry()
+    reg_key = key_for("unit", "tanh", {"n": 16}, "mesh")
+    svc.publish(reg_key, real_recording)
+    cl = RegistryClient(svc, netem=NetworkEmulator(WIFI), key=KEY)
+    rp = Replayer(key=KEY)
+    names = cl.into_replayer(rp, [reg_key])
+    assert names == [reg_key] and reg_key in rp
+    assert rp.stats["executions"] == 1                 # warmed
+    x = jnp.linspace(-1, 1, 16)
+    np.testing.assert_allclose(np.asarray(rp.execute(reg_key, x)),
+                               np.tanh(np.asarray(x)) * 2.0, rtol=1e-6)
+
+
+# ------------------------------------------------------ trust boundary ----
+SIDE_EFFECTS = []
+
+
+class _Evil:
+    def __reduce__(self):
+        return (SIDE_EFFECTS.append, ("pwned",))
+
+
+def test_signature_verified_before_any_unpickle():
+    """An attacker-signed recording with a malicious pickle in trees must
+    be rejected by the HMAC check BEFORE pickle.loads can run."""
+    SIDE_EFFECTS.clear()
+    evil = Recording({"name": "evil"}, b"payload",
+                     pickle.dumps(_Evil())).sign_with(b"attacker-key")
+    with pytest.raises(TamperedRecordingError):
+        Replayer(key=KEY).load(evil.to_bytes())
+    assert SIDE_EFFECTS == []
+
+    # the service refuses to even publish a foreign-signed recording
+    _store, svc = make_registry()
+    with pytest.raises(TamperedRecordingError):
+        svc.publish("evil", evil)
+
+    # and a store-side swap of the trees chunk is caught by the client's
+    # verification chain (chunk digests + HMAC), still before unpickling
+    good = synthetic_recording()
+    store2, svc2 = make_registry()
+    svc2.publish("k", good)
+    trees_row = next(c for c in store2.entry("k")["chunks"]
+                     if c["part"] == "trees")
+    store2._mem_chunks[trees_row["d"]] = b"not-zlib-not-signed"
+    cl = RegistryClient(svc2, netem=None, key=KEY)
+    with pytest.raises(TamperedRecordingError):
+        cl.fetch("k")
+    assert SIDE_EFFECTS == []
+
+
+def test_unsigned_load_requires_explicit_opt_in(real_recording):
+    blob = real_recording.to_bytes()
+    with pytest.raises(UnverifiedRecordingError):
+        Recording.from_bytes(blob)
+    with pytest.raises(UnverifiedRecordingError):
+        Replayer()                                  # no key, no opt-in
+    rec = Recording.from_bytes(blob, allow_unsigned=True)   # explicit
+    assert rec.manifest["name"] == real_recording.manifest["name"]
+    rp = Replayer(key=None, allow_unsigned=True)
+    assert rp.load(blob) == real_recording.manifest["name"]
+
+
+# -------------------------------------------------- serve integration ----
+def test_engine_boots_from_registry_with_record_on_miss():
+    """build_engine(--from-registry --record-on-miss): first boot records
+    through the single-flight lease; second boot is a pure registry hit
+    (no record calls, recordings fetched + warmed into the Replayer)."""
+    from repro.configs import get_config, smoke_shrink
+    from repro.launch.serve import build_engine
+    from repro.models import model as M
+
+    cfg = smoke_shrink(get_config("cody-mnist"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    with tempfile.TemporaryDirectory() as d:
+        outs = {}
+        for boot in ("cold", "warm"):
+            net = NetworkEmulator(WIFI)
+            eng = build_engine(
+                cfg, n_slots=2, cache_len=64, block_k=4, eos_id=2,
+                params=params, registry_dir=d, record_on_miss=True,
+                key=KEY, netem=net, speculate=False, pipeline_depth=1)
+            plen = eng.fixed_prompt_len
+            assert plen is not None
+            for _ in range(2):
+                eng.submit(list(rng.integers(3, cfg.vocab_size, plen)), 6)
+            outs[boot] = eng.run()
+            stats = dict(eng.registry_client.stats)
+            if boot == "cold":
+                assert stats["recording_round_trips"] == 2   # prefill+decode
+                rng = np.random.default_rng(0)               # same prompts
+            else:
+                assert stats.get("recording_round_trips", 0) == 0
+                assert stats["registry_hits"] == 2
+        # same prompts replayed from the registry: identical tokens
+        assert outs["cold"] == outs["warm"]

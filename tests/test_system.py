@@ -32,7 +32,7 @@ def test_record_then_replay_inference_end_to_end():
     with tempfile.TemporaryDirectory() as d:
         record_main(["--arch", "qwen2.5-3b", "--out", d, "--key", "k1",
                      "--cache-len", "64", "--block-k", "4",
-                     "--batch", "2", "--seq", "16"])
+                     "--batch", "2", "--prefill-batch", "2", "--seq", "16"])
         rp = Replayer(key=b"k1")
         pre = rp.load(os.path.join(d, "qwen2.5-3b_prefill.codyrec"))
         dec = rp.load(os.path.join(d, "qwen2.5-3b_decode.codyrec"))
