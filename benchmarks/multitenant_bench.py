@@ -1,0 +1,144 @@
+"""Multi-tenant serving benchmark — the ISSUE-3 acceptance artifact.
+
+Serves an attention family (speculating) and a recurrent ssm family
+(speculation gated off) first ALONE, then CONCURRENTLY through one
+Scheduler, and reports per-stream p50 request latency, speculation hit
+rate, and frontier syncs per token.  The acceptance bar: under
+multi-tenancy the frontier remains the only host<->device sync point —
+each stream's syncs-per-token is no worse than its single-tenant run —
+and the token streams are bit-exact across the two modes.  Results land
+in ``BENCH_multitenant.json`` so CI tracks the trajectory.
+
+    PYTHONPATH=src python -m benchmarks.multitenant_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_shrink
+from repro.core.channel import LiveChannel
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import stream_kwargs
+from repro.models import model as M
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Scheduler
+from repro.sharding import rules_for
+from repro.training import steps as ST
+
+BLOCK_K = 4
+CACHE_LEN = 128
+N_SLOTS = 4
+ARCHS = ("qwen2.5-3b", "xlstm-350m")
+
+
+def _family(arch, seed):
+    cfg = smoke_shrink(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    rules = rules_for("serve", make_host_mesh(model=1).axis_names)
+    prefill = jax.jit(ST.make_prefill_step(cfg, rules, CACHE_LEN))
+    batched = None
+    if cfg.family in ("dense", "moe") and not cfg.sliding_window:
+        batched = jax.jit(ST.make_batched_prefill_step(cfg, rules, CACHE_LEN))
+    decode = jax.jit(
+        ST.make_fused_decode_step(cfg, rules, k=BLOCK_K, eos_id=2),
+        donate_argnums=(3,))
+    channel = LiveChannel(prefill, decode, batched)
+    kw = stream_kwargs(cfg, n_slots=N_SLOTS, cache_len=CACHE_LEN,
+                       block_k=BLOCK_K, eos_id=2, pipeline_depth=4)
+    return cfg, params, channel, kw
+
+
+def _prompts(cfg, n, seed):
+    rng = np.random.default_rng(seed)
+    return [list(rng.integers(3, cfg.vocab_size, int(rng.integers(4, 16))))
+            for _ in range(n)]
+
+
+def _stream_row(name, ex, outs, wall_s):
+    toks = sum(len(v) for v in outs.values())
+    lat = sorted(r.finish_t - r.submit_t for r in ex.requests.values()
+                 if r.done)
+    blocks = int(ex.stats["spec_blocks"] + ex.stats["sync_blocks"])
+    return {
+        "stream": name,
+        "tokens": toks,
+        "wall_s": round(wall_s, 4),
+        "p50_latency_s": round(lat[len(lat) // 2], 4) if lat else None,
+        "host_syncs": int(ex.stats["host_syncs"]),
+        "syncs_per_token": round(ex.stats["host_syncs"] / toks, 4),
+        "spec_hit_rate": round(ex.stats["spec_blocks"] / blocks, 4)
+        if blocks else 0.0,
+        "spec_blocks": int(ex.stats["spec_blocks"]),
+        "mispredicts": int(ex.stats["mispredicts"]),
+        "blocks_dispatched": int(ex.stats["blocks_dispatched"]),
+        "outputs_digest": hash(tuple(tuple(v) for _, v in
+                                     sorted(outs.items()))) & 0xFFFFFFFF,
+    }
+
+
+def main(quick: bool = False, out_json: str = "BENCH_multitenant.json"):
+    requests = 4 if quick else 8
+    max_new = 16 if quick else 32
+    fams = {arch: _family(arch, seed) for seed, arch in enumerate(ARCHS)}
+    prompts = {arch: _prompts(fams[arch][0], requests, 100 + i)
+               for i, arch in enumerate(ARCHS)}
+
+    # warm-up: compile every shape both modes will hit
+    for arch, (cfg, params, channel, kw) in fams.items():
+        eng = Engine(params, channel=channel, **kw)
+        for p in prompts[arch]:
+            eng.submit(p, max_new)
+        eng.run()
+
+    solo_rows = {}
+    for arch, (cfg, params, channel, kw) in fams.items():
+        eng = Engine(params, channel=channel, **kw)
+        for p in prompts[arch]:
+            eng.submit(p, max_new)
+        t0 = time.time()
+        outs = eng.run()
+        solo_rows[arch] = _stream_row(arch, eng.stream, outs,
+                                      time.time() - t0)
+
+    sched = Scheduler()
+    for arch, (cfg, params, channel, kw) in fams.items():
+        sched.add_stream(arch, channel, params, **kw)
+        for p in prompts[arch]:
+            sched.submit(arch, p, max_new)
+    t0 = time.time()
+    outs = sched.run()
+    multi_wall = time.time() - t0
+    multi_rows = {arch: _stream_row(arch, sched.streams[arch], outs[arch],
+                                    multi_wall) for arch in ARCHS}
+
+    result = {
+        "archs": list(ARCHS), "block_k": BLOCK_K, "n_slots": N_SLOTS,
+        "requests_per_stream": requests, "max_new": max_new,
+        "solo": list(solo_rows.values()),
+        "multi": list(multi_rows.values()),
+        "frontier": dict(sched.frontier.stats),
+        # acceptance: multi-tenancy adds no host syncs and changes no token
+        "bit_exact_vs_solo": all(
+            multi_rows[a]["outputs_digest"] == solo_rows[a]["outputs_digest"]
+            for a in ARCHS),
+        "frontier_only_syncs": all(
+            multi_rows[a]["syncs_per_token"] <= solo_rows[a]["syncs_per_token"]
+            for a in ARCHS),
+    }
+    with open(out_json, "w") as f:
+        json.dump(result, f, indent=2)
+    return [*result["solo"], *[{**r, "stream": r["stream"] + "+mt"}
+                               for r in result["multi"]]]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    for r in main(quick=args.quick):
+        print(r)

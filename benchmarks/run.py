@@ -7,7 +7,6 @@ Prints ``name,us_per_call,derived`` CSV rows per bench plus table sections.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 
@@ -25,6 +24,16 @@ def _registry_section(quick: bool):
               f"records={r['record_calls']};rxB={r['bytes_received']}")
 
 
+def _multitenant_section(quick: bool):
+    _section("Multi-tenant: two families, one scheduler "
+             "(-> BENCH_multitenant.json)")
+    from benchmarks import multitenant_bench
+    for r in multitenant_bench.main(quick=quick):
+        print(f"multitenant_{r['stream']},{r['wall_s']*1e6:.0f},"
+              f"p50={r['p50_latency_s']};spt={r['syncs_per_token']};"
+              f"hit={r['spec_hit_rate']}")
+
+
 def _decode_pipeline_section(quick: bool):
     _section("Decode pipeline: host syncs + tokens/s vs depth "
              "(-> BENCH_decode.json)")
@@ -39,19 +48,22 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI mode: decode pipeline + registry benches only, "
-                         "emit BENCH_decode.json + BENCH_registry.json")
+                    help="CI mode: decode pipeline + multitenant + registry "
+                         "benches only, emit BENCH_decode.json + "
+                         "BENCH_multitenant.json + BENCH_registry.json")
     args = ap.parse_args()
     t0 = time.time()
     print("name,us_per_call,derived")
 
     if args.smoke:
         _decode_pipeline_section(quick=True)
+        _multitenant_section(quick=True)
         _registry_section(quick=True)
         print(f"\n# total bench wall time: {time.time()-t0:.1f}s")
         return
 
     _decode_pipeline_section(quick=args.quick)
+    _multitenant_section(quick=args.quick)
     _registry_section(quick=args.quick)
 
     _section("Paper Fig.7 + Table 1: recording delays (emulated networks)")

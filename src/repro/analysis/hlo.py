@@ -20,7 +20,6 @@ Cross-checked against cost_analysis() on unrolled modules in tests.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

@@ -1,9 +1,15 @@
 """CODY core: record/replay of compiled execution plans + the paper's three
-I/O optimizations (deferral, speculation, metastate-only sync)."""
+I/O optimizations (deferral, speculation, metastate-only sync), and the
+ExecutionChannel transport seam the serving stack dispatches through."""
 from repro.core.attest import (TamperedRecordingError, TopologyMismatchError,
                                UnverifiedRecordingError, fingerprint, sign,
                                verify)
-from repro.core.deferral import CommitQueue, Op, Symbol, UnresolvedSymbolError
+from repro.core.channel import (ChannelCapabilityError, ExecutionChannel,
+                                LiveChannel, NetemBilledChannel,
+                                ReplayChannel)
+from repro.core.deferral import (CommitQueue, Op, Symbol,
+                                 SymbolReResolutionError,
+                                 UnresolvedSymbolError)
 from repro.core.metasync import DeltaSync, full_pack, is_metastate, merge, split
 from repro.core.netem import CELLULAR, LOCAL, WIFI, NetProfile, NetworkEmulator
 from repro.core.recording import Recording
@@ -11,10 +17,12 @@ from repro.core.speculation import (HistorySpeculator, MispredictError,
                                     SpeculativeRunner)
 
 __all__ = [
-    "CommitQueue", "Op", "Symbol", "UnresolvedSymbolError", "Recording",
-    "HistorySpeculator", "MispredictError", "SpeculativeRunner", "DeltaSync",
-    "full_pack", "is_metastate", "merge", "split", "NetworkEmulator",
-    "NetProfile", "WIFI", "CELLULAR", "LOCAL", "fingerprint", "sign",
-    "verify", "TamperedRecordingError", "TopologyMismatchError",
-    "UnverifiedRecordingError",
+    "CommitQueue", "Op", "Symbol", "UnresolvedSymbolError",
+    "SymbolReResolutionError", "Recording", "ExecutionChannel",
+    "LiveChannel", "ReplayChannel", "NetemBilledChannel",
+    "ChannelCapabilityError", "HistorySpeculator", "MispredictError",
+    "SpeculativeRunner", "DeltaSync", "full_pack", "is_metastate", "merge",
+    "split", "NetworkEmulator", "NetProfile", "WIFI", "CELLULAR", "LOCAL",
+    "fingerprint", "sign", "verify", "TamperedRecordingError",
+    "TopologyMismatchError", "UnverifiedRecordingError",
 ]

@@ -1,0 +1,180 @@
+"""ExecutionChannel — the transport seam between serving and the device.
+
+``repro.core.deferral`` already states the contract: the channel is any
+in-order executor of host<->device interactions.  This module makes that
+seam a first-class object so the serving stack (scheduler / stream
+executors / commit frontier) is transport-agnostic.  Three transports
+share one interface:
+
+  * ``LiveChannel``     — live jitted callables (the cloud / record role);
+  * ``ReplayChannel``   — signed recordings through a ``Replayer`` (the
+                          paper's in-TEE mode).  TRUST BOUNDARY: this
+                          module imports NO model/config/training code, so
+                          a replay channel reaches decode with nothing but
+                          verified executables in the TCB;
+  * ``NetemBilledChannel`` — wraps another channel, billing every dispatch
+                          to a ``NetworkEmulator`` and logging the
+                          interaction trace (site + input avals): the
+                          record/emulation transport the paper uses to
+                          price the distributed-driver link.
+
+A channel exposes the three step kinds the serving runtime dispatches —
+``prefill``, ``batched_prefill`` (optional capability), and
+``decode_block``.  The ``CommitQueue`` side of a stream stays with the
+``StreamExecutor`` (an op's meaning — dispatch vs. in-flight readback —
+is executor state); the channel is purely the step transport.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+
+class ChannelCapabilityError(NotImplementedError):
+    """The channel does not implement the requested step kind."""
+
+
+class ExecutionChannel:
+    """Transport endpoint executing serving steps in program order.
+
+    ``kind`` names the transport; ``fixed_prompt_len`` is non-None when
+    the transport only accepts one prefill shape (recorded executables);
+    ``supports_batched_prefill`` gates grouped right-padded admission.
+    """
+
+    kind = "abstract"
+
+    @property
+    def fixed_prompt_len(self) -> Optional[int]:
+        return None
+
+    @property
+    def supports_batched_prefill(self) -> bool:
+        return False
+
+    def prefill(self, params, batch):
+        raise ChannelCapabilityError(f"{self.kind}: prefill")
+
+    def batched_prefill(self, params, tokens, lengths):
+        raise ChannelCapabilityError(f"{self.kind}: batched_prefill")
+
+    def decode_block(self, params, tokens, pos, caches):
+        raise ChannelCapabilityError(f"{self.kind}: decode_block")
+
+
+class LiveChannel(ExecutionChannel):
+    """Live-jit transport: wraps already-built callables.
+
+    The callables are typically ``jax.jit`` products, but anything with
+    the step signatures works — which is what lets the Engine facade and
+    the tests inject wrapped/fault-injecting steps unchanged.
+    """
+
+    kind = "live-jit"
+
+    def __init__(self, prefill_fn: Callable, decode_fn: Callable,
+                 batched_prefill_fn: Optional[Callable] = None,
+                 fixed_prompt_len: Optional[int] = None):
+        self._prefill = prefill_fn
+        self._decode = decode_fn
+        self._batched_prefill = batched_prefill_fn
+        self._fixed_prompt_len = fixed_prompt_len
+
+    @property
+    def fixed_prompt_len(self) -> Optional[int]:
+        return self._fixed_prompt_len
+
+    @property
+    def supports_batched_prefill(self) -> bool:
+        return self._batched_prefill is not None
+
+    def prefill(self, params, batch):
+        return self._prefill(params, batch)
+
+    def batched_prefill(self, params, tokens, lengths):
+        if self._batched_prefill is None:
+            raise ChannelCapabilityError(f"{self.kind}: batched_prefill")
+        return self._batched_prefill(params, tokens, lengths)
+
+    def decode_block(self, params, tokens, pos, caches):
+        return self._decode(params, tokens, pos, caches)
+
+
+class ReplayChannel(ExecutionChannel):
+    """Signed-replay transport: executes verified recordings only.
+
+    Holds a ``Replayer`` plus the logical names of the prefill/decode
+    recordings.  Prefill shape is pinned by the recording (``seq`` in the
+    manifest's static meta); batched prefill is structurally unsupported —
+    a recorded executable has exactly the shapes it was recorded with.
+    """
+
+    kind = "signed-replay"
+
+    def __init__(self, replayer, prefill_name: str, decode_name: str):
+        self._rp = replayer
+        self._pre = prefill_name
+        self._dec = decode_name
+
+    @property
+    def replayer(self):
+        return self._rp
+
+    @property
+    def fixed_prompt_len(self) -> Optional[int]:
+        seq = self._rp.manifest(self._pre).get("static", {}).get("seq")
+        return int(seq) if seq else None
+
+    def prefill(self, params, batch):
+        return self._rp.execute(self._pre, params, batch)
+
+    def decode_block(self, params, tokens, pos, caches):
+        return self._rp.execute(self._dec, params, tokens, pos, caches)
+
+
+class NetemBilledChannel(ExecutionChannel):
+    """Record/emulation transport: every dispatch crosses the emulated
+    link and lands in the interaction log.
+
+    Dispatches ship as ASYNC trips (commands are metastate-sized and the
+    distributed driver does not stall on a dispatch — paper fig. 5c); the
+    log rows ``(step, site-ish arg summary)`` are the recording trace a
+    record phase persists.  Wrap any inner channel: a ``LiveChannel`` for
+    record mode, a ``ReplayChannel`` for priced replay emulation.
+    """
+
+    kind = "netem-billed"
+    DISPATCH_BYTES = 256          # command + descriptor metastate per step
+
+    def __init__(self, inner: ExecutionChannel, netem):
+        self.inner = inner
+        self.netem = netem
+        self.log: List[tuple] = []
+
+    @property
+    def fixed_prompt_len(self) -> Optional[int]:
+        return self.inner.fixed_prompt_len
+
+    @property
+    def supports_batched_prefill(self) -> bool:
+        return self.inner.supports_batched_prefill
+
+    def _bill(self, step: str, *shaped):
+        self.log.append((step, tuple(
+            (tuple(getattr(a, "shape", ())), str(getattr(a, "dtype", "")))
+            for a in shaped)))
+        if self.netem is not None:
+            self.netem.async_trip(send_bytes=self.DISPATCH_BYTES,
+                                  recv_bytes=0)
+
+    def prefill(self, params, batch):
+        self._bill("prefill", *(batch.values() if isinstance(batch, dict)
+                                else (batch,)))
+        return self.inner.prefill(params, batch)
+
+    def batched_prefill(self, params, tokens, lengths):
+        self._bill("batched_prefill", tokens, lengths)
+        return self.inner.batched_prefill(params, tokens, lengths)
+
+    def decode_block(self, params, tokens, pos, caches):
+        self._bill("decode_block", tokens, pos)
+        return self.inner.decode_block(params, tokens, pos, caches)

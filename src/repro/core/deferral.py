@@ -10,15 +10,17 @@ runtime: dispatches (writes) and readbacks (reads: done-flags, token values,
 metrics).  ``CommitQueue`` preserves program order per stream, coalesces
 round trips, and supports symbolic reads exactly like the paper.
 
-This module is runtime-agnostic: the channel is any ``execute_batch(ops)``
-callable (a real device loop, or the NetworkEmulator-backed fake used by the
-paper-reproduction benchmarks).
+This module is runtime-agnostic: the channel is anything callable that
+executes one ``Op`` at a time in program order — a real device loop, the
+NetworkEmulator-backed fake used by the paper-reproduction benchmarks, or
+a serving stream's executor (which turns ops into ``ExecutionChannel``
+step dispatches, see ``repro.core.channel``).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, List, Optional
 
 _ids = itertools.count()
 
@@ -40,6 +42,11 @@ class Symbol:
         return self._value
 
     def resolve(self, v):
+        if self.resolved:
+            # a second resolution would silently rewrite history the
+            # speculation/validation machinery already acted on
+            raise SymbolReResolutionError(
+                f"symbol {self.sid} @ {self.site} already resolved")
         self._value = v
         self.resolved = True
 
@@ -49,6 +56,10 @@ class Symbol:
 
 class UnresolvedSymbolError(Exception):
     pass
+
+
+class SymbolReResolutionError(RuntimeError):
+    """A deferred read was resolved twice (program-order violation)."""
 
 
 @dataclasses.dataclass

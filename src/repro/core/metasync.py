@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import hashlib
 import io
+import re
 import zlib
 from typing import Any, Dict, Tuple
 
@@ -28,11 +29,21 @@ import numpy as np
 META_MAX_ELEMS = 4096     # leaves larger than this are program data
 _META_HINTS = ("pos", "step", "rng", "page", "done", "length", "count",
                "slot", "id", "mask")
+_TOKEN_SPLIT = re.compile(r"[^a-z0-9]+")
+
+
+def _path_tokens(path: str) -> Tuple[str, ...]:
+    """Split a keystr path into name tokens: ``['hidden_mask'][0]`` ->
+    ('hidden', 'mask', '0').  Hints match whole tokens (plural allowed),
+    never substrings — ``"id" in "hidden"`` must not classify a weight
+    leaf as metastate."""
+    return tuple(t for t in _TOKEN_SPLIT.split(path.lower()) if t)
 
 
 def is_metastate(path: str, leaf) -> bool:
     arr = np.asarray(leaf)
-    if any(h in path.lower() for h in _META_HINTS):
+    if any(t in _META_HINTS or t.rstrip("s") in _META_HINTS
+           for t in _path_tokens(path)):
         return True
     if np.issubdtype(arr.dtype, np.integer) or arr.dtype == np.bool_:
         return arr.size <= META_MAX_ELEMS * 64

@@ -15,8 +15,6 @@ fingerprint before loading; it never retraces or recompiles.
 from __future__ import annotations
 
 import dataclasses
-import io
-import pickle
 from typing import Any, Dict, Optional
 
 import msgpack

@@ -13,7 +13,6 @@ paper's Fig. 8 statistics (commit categories, speculation hit rates).
 from __future__ import annotations
 
 import collections
-import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.deferral import CommitQueue, Op
@@ -28,18 +27,24 @@ class MispredictError(Exception):
 
 
 class HistorySpeculator:
-    """Predict commit outcomes from k identical historical outcomes."""
+    """Predict commit outcomes from k identical historical outcomes.
+
+    One speculator may be SHARED across serving streams: histories are
+    keyed by ``(stream, site-sequence)``, so a multi-tenant scheduler
+    gets per-stream prediction dynamics identical to serving each stream
+    alone (tenant isolation — histories never mix)."""
 
     def __init__(self, k: int = 3):
         self.k = k
         self.history: Dict[str, collections.deque] = {}
         self.stats = collections.Counter()
 
-    def _key(self, ops: List[Op]) -> str:
-        return "|".join(f"{o.kind}:{o.site}" for o in ops)
+    def _key(self, ops: List[Op], stream: str = "") -> str:
+        sites = "|".join(f"{o.kind}:{o.site}" for o in ops)
+        return f"{stream}::{sites}" if stream else sites
 
-    def predict(self, ops: List[Op]) -> Optional[Tuple]:
-        key = self._key(ops)
+    def predict(self, ops: List[Op], stream: str = "") -> Optional[Tuple]:
+        key = self._key(ops, stream)
         h = self.history.get(key)
         if h is None or len(h) < self.k:
             self.stats["no_history"] += 1
@@ -51,8 +56,8 @@ class HistorySpeculator:
         self.stats["low_confidence"] += 1
         return None
 
-    def record(self, ops: List[Op], outcome: Tuple):
-        key = self._key(ops)
+    def record(self, ops: List[Op], outcome: Tuple, stream: str = ""):
+        key = self._key(ops, stream)
         self.history.setdefault(key, collections.deque(maxlen=16)).append(
             tuple(outcome))
 

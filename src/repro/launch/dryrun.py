@@ -1,3 +1,5 @@
+# ruff: noqa: E402
+# (XLA_FLAGS must be set before any jax-importing module is touched)
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # The two lines above MUST run before any other import (jax locks the device
@@ -15,7 +17,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis import hlo as hlo_an

@@ -5,7 +5,16 @@ the paper's in-TEE replay mode.  Recordings come from a flat directory
 (``--from-registry``), the latter with chunked/resumable fetch over an
 emulated network and collaborative record-on-miss.
 
+Execution is transport-agnostic: ``build_channel`` returns the
+``ExecutionChannel`` (live-jit / signed-replay / netem-billed) a stream
+decodes through, ``build_engine`` wires one stream through the layered
+stack behind the classic ``Engine`` facade, and ``build_scheduler``
+serves SEVERAL model families concurrently through one ``Scheduler``
+(e.g. an attention family with speculation next to a recurrent family
+with speculation gated off):
+
     python -m repro.launch.serve --arch qwen2.5-3b --smoke --requests 8
+    python -m repro.launch.serve --streams qwen2.5-3b,xlstm-350m --requests 8
     python -m repro.launch.serve --from-recordings /tmp/recordings --key k
     python -m repro.launch.serve --from-registry /tmp/recordings/registry \
         --net wifi --record-on-miss --key k
@@ -16,25 +25,27 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_shrink
+from repro.core.channel import LiveChannel, NetemBilledChannel
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.serving.engine import Engine, cache_batch_axes_for
+from repro.serving.scheduler import Scheduler
 from repro.sharding import rules_for
 from repro.training import steps as ST
 
 
-def _registry_replayer(cfg, mesh, rules, *, registry_dir: str, key: bytes,
-                       n_slots: int, cache_len: int, block_k: int,
-                       netem=None, record_on_miss: bool = False,
-                       rec_seq: int = 16):
-    """Boot a Replayer from the registry: fetch-by-key (chunked, resumable,
-    netem-billed), verify, preload + warm — a replica boots from a registry
-    hit without recompiling.  On miss, ``record_on_miss`` records through
-    the service's single-flight lease with THIS engine's exact shapes."""
+def _registry_channel(cfg, mesh, rules, *, registry_dir: str, key: bytes,
+                      n_slots: int, cache_len: int, block_k: int,
+                      netem=None, record_on_miss: bool = False,
+                      rec_seq: int = 16):
+    """Boot a ReplayChannel from the registry: fetch-by-key (chunked,
+    resumable, netem-billed), verify, preload + warm — a replica boots from
+    a registry hit without recompiling.  On miss, ``record_on_miss``
+    records through the service's single-flight lease with THIS engine's
+    exact shapes.  The serving stack receives only the channel."""
     from repro.core.attest import fingerprint
     from repro.core.recorder import (mesh_descriptor, record,
                                      topology_fingerprint)
@@ -92,45 +103,40 @@ def _registry_replayer(cfg, mesh, rules, *, registry_dir: str, key: bytes,
                                   static_meta=static)
         items.append((reg_key, record_fn))
     rp = Replayer(key=key)
-    pre, dec = client.into_replayer(rp, items, warm=True)
-    return rp, pre, dec, client
+    channel = client.into_channel(rp, items[0], items[1], warm=True)
+    return channel, client
 
 
-def build_engine(cfg, *, n_slots: int, cache_len: int, block_k: int,
-                 eos_id: int, params=None, recordings_dir: str = "",
-                 registry_dir: str = "", record_on_miss: bool = False,
-                 key: bytes = b"", netem=None, speculate=True,
-                 pipeline_depth: int = 4) -> Engine:
+def build_channel(cfg, *, cache_len: int, block_k: int, eos_id: int = 2,
+                  n_slots: int = 4, recordings_dir: str = "",
+                  registry_dir: str = "", record_on_miss: bool = False,
+                  key: bytes = b"", netem=None, bill_dispatches: bool = False):
+    """Build the ExecutionChannel for one workload.
+
+    Live-jit by default; signed-replay when ``recordings_dir`` /
+    ``registry_dir`` is given (the paper's in-TEE mode — the channel never
+    imports model code at decode time); wrap with ``bill_dispatches`` for
+    the netem-billed record/emulation transport.  Returns
+    ``(channel, registry_client_or_None)``."""
     mesh = make_host_mesh(model=1)
     rules = rules_for("serve", mesh.axis_names)
-    batched_prefill = None
-    fixed_prompt_len = None
     registry_client = None
-    if cfg.family in ("ssm", "hybrid"):
-        # recurrent state is not position-indexed: dropped pipeline tails
-        # cannot be re-executed against an already-advanced state, so the
-        # engine's metastate-only rollback is unsound here
-        speculate = False
     if registry_dir:
-        rp, pre, dec, registry_client = _registry_replayer(
+        channel, registry_client = _registry_channel(
             cfg, mesh, rules, registry_dir=registry_dir, key=key,
             n_slots=n_slots, cache_len=cache_len, block_k=block_k,
             netem=netem, record_on_miss=record_on_miss)
-        prefill_fn = lambda p, b: rp.execute(pre, p, b)
-        decode_fn = lambda p, t, po, c: rp.execute(dec, p, t, po, c)
-        fixed_prompt_len = rp.manifest(pre)["static"].get("seq")
     elif recordings_dir:
+        from repro.core.channel import ReplayChannel
         from repro.core.replay import Replayer
         from repro.launch.record import recording_name
         rp = Replayer(key=key)
         pre = rp.load(f"{recordings_dir}/{recording_name(cfg.name, 'prefill')}")
         dec = rp.load(f"{recordings_dir}/{recording_name(cfg.name, 'decode')}")
         rp.warm(dec)   # decode joins the async pipeline with no cold start
-        prefill_fn = lambda p, b: rp.execute(pre, p, b)
-        decode_fn = lambda p, t, po, c: rp.execute(dec, p, t, po, c)
         # recorded executables are fixed-shape: prompts must match the
-        # recorded prefill seq (callers read this off the engine)
-        fixed_prompt_len = rp.manifest(pre)["static"].get("seq")
+        # recorded prefill seq (callers read this off the channel)
+        channel = ReplayChannel(rp, pre, dec)
     else:
         prefill_fn = jax.jit(ST.make_prefill_step(cfg, rules, cache_len))
         decode_fn = jax.jit(
@@ -139,24 +145,111 @@ def build_engine(cfg, *, n_slots: int, cache_len: int, block_k: int,
         # grouped right-padded admission: attention families only (decode
         # masks rows >= pos; recurrent state is not position-indexed), and
         # the SWA ring layout depends on the true length
+        batched_prefill = None
         if cfg.family in ("dense", "moe") and not cfg.sliding_window:
             batched_prefill = jax.jit(
                 ST.make_batched_prefill_step(cfg, rules, cache_len))
-    init_caches = lambda: M.init_cache(cfg, n_slots, cache_len)
-    eng = Engine(params, prefill_fn, decode_fn, n_slots=n_slots,
-                 cache_len=cache_len, block_k=block_k, eos_id=eos_id,
-                 init_caches_fn=init_caches,
-                 cache_batch_axes=cache_batch_axes_for(cfg), netem=netem,
-                 speculate=speculate, pipeline_depth=pipeline_depth,
-                 batched_prefill_fn=batched_prefill)
-    eng.fixed_prompt_len = fixed_prompt_len
+        channel = LiveChannel(prefill_fn, decode_fn, batched_prefill)
+    if bill_dispatches:
+        channel = NetemBilledChannel(channel, netem)
+    return channel, registry_client
+
+
+def stream_kwargs(cfg, *, n_slots: int, cache_len: int, block_k: int,
+                  eos_id: int, speculate: bool = True,
+                  pipeline_depth: int = 4) -> dict:
+    """Per-stream policy for ``Scheduler.add_stream`` derived from the
+    model family: recurrent state is not position-indexed, so dropped
+    pipeline tails cannot be re-executed against an already-advanced
+    state — the engine's metastate-only rollback is unsound there and
+    speculation is forced off."""
+    if cfg.family in ("ssm", "hybrid"):
+        speculate = False
+    return dict(n_slots=n_slots, cache_len=cache_len, block_k=block_k,
+                eos_id=eos_id,
+                init_caches_fn=lambda: M.init_cache(cfg, n_slots, cache_len),
+                cache_batch_axes=cache_batch_axes_for(cfg),
+                speculate=speculate, pipeline_depth=pipeline_depth)
+
+
+def build_engine(cfg, *, n_slots: int, cache_len: int, block_k: int,
+                 eos_id: int, params=None, recordings_dir: str = "",
+                 registry_dir: str = "", record_on_miss: bool = False,
+                 key: bytes = b"", netem=None, speculate=True,
+                 pipeline_depth: int = 4) -> Engine:
+    """Single-workload path: one stream behind the classic Engine facade."""
+    channel, registry_client = build_channel(
+        cfg, cache_len=cache_len, block_k=block_k, eos_id=eos_id,
+        n_slots=n_slots, recordings_dir=recordings_dir,
+        registry_dir=registry_dir, record_on_miss=record_on_miss, key=key,
+        netem=netem)
+    kw = stream_kwargs(cfg, n_slots=n_slots, cache_len=cache_len,
+                       block_k=block_k, eos_id=eos_id, speculate=speculate,
+                       pipeline_depth=pipeline_depth)
+    eng = Engine(params, channel=channel, netem=netem, **kw)
     eng.registry_client = registry_client
     return eng
+
+
+def build_scheduler(archs, *, n_slots: int, cache_len: int, block_k: int,
+                    eos_id: int = 2, netem=None, speculate: bool = True,
+                    pipeline_depth: int = 4, smoke: bool = True,
+                    max_live_slots=None, stall_limit=None, seed: int = 0):
+    """Multi-workload path: one Scheduler, one stream per arch, each with
+    its own live-jit channel, params, slots, and caches.  Returns
+    ``(scheduler, {name: cfg})``."""
+    sched = Scheduler(netem=netem, max_live_slots=max_live_slots,
+                      stall_limit=stall_limit)
+    cfgs = {}
+    for i, arch in enumerate(archs):
+        cfg = get_config(arch)
+        if smoke:
+            cfg = smoke_shrink(cfg)
+        params = M.init_params(cfg, jax.random.PRNGKey(seed + i))
+        channel, _ = build_channel(cfg, cache_len=cache_len,
+                                   block_k=block_k, eos_id=eos_id,
+                                   n_slots=n_slots, netem=netem)
+        kw = stream_kwargs(cfg, n_slots=n_slots, cache_len=cache_len,
+                           block_k=block_k, eos_id=eos_id,
+                           speculate=speculate,
+                           pipeline_depth=pipeline_depth)
+        sched.add_stream(cfg.name, channel, params, **kw)
+        cfgs[cfg.name] = cfg
+    return sched, cfgs
+
+
+def _serve_multi(args, netem):
+    archs = [a.strip() for a in args.streams.split(",") if a.strip()]
+    sched, cfgs = build_scheduler(
+        archs, n_slots=args.slots, cache_len=args.cache_len,
+        block_k=args.block_k, netem=netem,
+        speculate=not args.no_speculate,
+        pipeline_depth=args.pipeline_depth, smoke=args.smoke)
+    rng = np.random.default_rng(0)
+    for name, cfg in cfgs.items():
+        for _ in range(args.requests):
+            plen = int(rng.integers(4, 16))
+            sched.submit(name, list(rng.integers(3, cfg.vocab_size, plen)),
+                         args.max_new)
+    t0 = time.time()
+    outs = sched.run()
+    dt = time.time() - t0
+    toks = sum(len(v) for per in outs.values() for v in per.values())
+    print(f"served {len(cfgs)} streams x {args.requests} requests, "
+          f"{toks} tokens in {dt:.2f}s ({toks/dt:.0f} tok/s)")
+    for name, ex in sched.streams.items():
+        print(f"  [{name}] stats: {dict(ex.stats)}")
+    print("frontier:", dict(sched.frontier.stats))
+    print("speculator:", dict(sched.spec.stats))
+    return outs, sched
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--streams", default="",
+                    help="comma-separated archs to serve CONCURRENTLY "
+                         "through one Scheduler (multi-tenant mode)")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=24)
@@ -177,15 +270,19 @@ def main(argv=None):
     ap.add_argument("--key", default="cody-demo-key")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = smoke_shrink(cfg)
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
     netem = None
     if args.net != "none":
         from repro.core.netem import CELLULAR, LOCAL, WIFI, NetworkEmulator
         netem = NetworkEmulator(
             {"wifi": WIFI, "cellular": CELLULAR, "local": LOCAL}[args.net])
+
+    if args.streams:
+        return _serve_multi(args, netem)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_shrink(cfg)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
     eng = build_engine(cfg, n_slots=args.slots, cache_len=args.cache_len,
                        block_k=args.block_k, eos_id=2, params=params,
                        recordings_dir=args.from_recordings,

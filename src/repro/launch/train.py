@@ -14,7 +14,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, smoke_shrink
 from repro.data.pipeline import Prefetcher, SyntheticLM
@@ -22,7 +21,7 @@ from repro.launch.mesh import make_host_mesh, set_mesh
 from repro.models import model as M
 from repro.runtime.checkpoint import CheckpointStore
 from repro.runtime.elastic import reshard_state
-from repro.sharding import rules_for, shardings_for
+from repro.sharding import rules_for
 from repro.training import steps as ST
 from repro.training.grad_compress import make_ef_int8_transform
 from repro.training.optimizer import AdamWConfig, init_opt_state

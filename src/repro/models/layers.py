@@ -12,7 +12,6 @@ never materialize quadratic scores.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import jax

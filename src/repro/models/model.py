@@ -13,7 +13,7 @@ zamba_group (6 mamba + shared attention block), xlstm_group (5 mLSTM +
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp

@@ -158,6 +158,18 @@ class RegistryClient:
         self.stats["verified_fetches"] += 1
         return blob
 
+    def into_channel(self, replayer, prefill_item, decode_item,
+                     warm: bool = True):
+        """Warm handoff targeting an ``ExecutionChannel``: fetch + verify
+        the prefill/decode recordings, preload them into ``replayer``, and
+        return a ready ``ReplayChannel`` — the serving stack never sees the
+        Replayer.  Items are ``key`` or ``(key, record_fn)`` as in
+        ``into_replayer``."""
+        from repro.core.channel import ReplayChannel
+        pre, dec = self.into_replayer(replayer, [prefill_item, decode_item],
+                                      warm=warm)
+        return ReplayChannel(replayer, pre, dec)
+
     def into_replayer(self, replayer,
                       keys: Iterable[Union[str, Tuple[str, Optional[
                           Callable[[], Recording]]]]],

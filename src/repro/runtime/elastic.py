@@ -12,11 +12,9 @@ mesh fingerprint.  On a topology change (node failure, scale-up):
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Tuple
 
 import jax
-import numpy as np
 
 from repro.sharding import rules_for, shardings_for
 

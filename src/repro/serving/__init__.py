@@ -1,0 +1,13 @@
+"""Layered serving stack: Scheduler -> StreamExecutor(s) -> CommitFrontier
+over ExecutionChannels (repro.core.channel).  ``Engine`` is the thin
+single-stream facade."""
+from repro.serving.cache import SlotTable
+from repro.serving.engine import Engine, cache_batch_axes_for
+from repro.serving.executor import (PreemptionUnsupportedError, Request,
+                                    StreamExecutor)
+from repro.serving.frontier import CommitFrontier
+from repro.serving.scheduler import Scheduler, UnknownStreamError
+
+__all__ = ["Engine", "Scheduler", "StreamExecutor", "CommitFrontier",
+           "SlotTable", "Request", "cache_batch_axes_for",
+           "PreemptionUnsupportedError", "UnknownStreamError"]

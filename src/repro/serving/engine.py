@@ -1,369 +1,145 @@
-"""Serving engine: continuous batching + the paper's three optimizations.
+"""Engine — thin single-stream facade over the layered serving stack.
 
-Decode runs in fused k-step blocks (ONE host dispatch per k tokens — the
-paper's register-access deferral + §4.3 polling-loop offload: the EOS
-"poll" lives device-side inside the block).  The hot path is a true
-ASYNCHRONOUS PIPELINE: a dispatched block's outputs stay on device as
-in-flight futures and the next block's inputs chain directly off them
-(``tokens[:, -1]``, ``pos``), so up to ``pipeline_depth`` blocks are in
-flight with ZERO host↔device syncs.  The only transfer is a small
-done-mask/metastate readback at ``validate()`` — the commit frontier —
-matching the paper's metastate-only sync (§5).
+The monolithic engine is gone; serving is now three layers (see
+``repro.serving.scheduler``):
 
-Speculative continuation (§4.2) decides whether chaining is allowed: when
-the commit history is k-confident about the done-mask, blocks ship via
-``CommitQueue.commit_async`` (no blocking round trip); otherwise the engine
-falls back to a synchronous commit.  Because token tails are applied only
-at the frontier, a mispredict (a sequence finished mid-pipeline) rolls
-back by simply NOT applying the speculative tail — pure metastate, no
-device work is redone; KV rows beyond the committed position are inert
-(repro.serving.cache invariant).
+  * ``Scheduler``      — admission across streams, slot pressure,
+                         preemption/eviction of stalled streams;
+  * ``StreamExecutor`` — one tenant's CommitQueue + pipeline of in-flight
+                         fused blocks over its ``ExecutionChannel``;
+  * ``CommitFrontier`` — the ONLY host<->device sync point: metastate
+                         readback, rollback-by-not-applying on mispredict.
 
-Admission is batched: pending requests are grouped, right-padded to shape
-buckets, prefilled in one dispatch, and scattered into the slot caches
-with one vectorized indexed-set per cache leaf.  Right padding is sound
-for attention families because decode masks cache rows >= pos; recurrent
-families (ssm/hybrid/xlstm) must keep the per-request path (their state is
-not position-indexed) — the launcher gates this.  The same non-position-
-indexed argument means recurrent families should serve with
-``speculate=False``: rolled-back pipeline tails cannot be re-executed
-against an already-advanced state.
-
-The engine can execute through live jitted functions OR through signed
-recordings via the Replayer (``use_replayer=True``) — the latter is the
-paper's in-TEE mode and imports no model code at decode time.
+``Engine`` keeps the original single-workload API — constructor, ``submit``
+/ ``step_block`` / ``validate`` / ``run``, ``stats`` / ``requests`` /
+``slots`` / ``spec`` — by wiring ONE stream through that stack, so every
+pre-existing test, launcher, and benchmark runs unchanged while
+multi-tenant callers use the ``Scheduler`` directly.  The execution
+transport is an ``ExecutionChannel`` (live-jit, signed-replay, or
+netem-billed — ``repro.core.channel``); raw ``prefill_fn`` /
+``fused_decode_fn`` callables are wrapped into a ``LiveChannel`` for
+backward compatibility.
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
-import time
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core.deferral import CommitQueue, Op
-from repro.core.speculation import HistorySpeculator
-from repro.serving.cache import SlotTable
+from repro.core.channel import ExecutionChannel, LiveChannel
+from repro.serving.executor import Request, StreamExecutor  # noqa: F401
+from repro.serving.scheduler import Scheduler
 
-ALL_RUNNING = ("all_running",)
-SOME_DONE = ("some_done",)
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: List[int]
-    max_new: int
-    generated: List[int] = dataclasses.field(default_factory=list)
-    committed: int = 0            # validated prefix of `generated`
-    done: bool = False
-    submit_t: float = 0.0
-    finish_t: float = 0.0
+__all__ = ["Engine", "Request", "StreamExecutor", "Scheduler",
+           "cache_batch_axes_for"]
 
 
 class Engine:
     """prefill_fn(params, batch) -> ({"next_tokens", ...}, caches_for_slot)
     fused_decode_fn(params, tokens, pos, caches) -> ({"tokens":[B,k],
-    "pos", "done"}, caches).  Both may be live jits or Replayer handles.
+    "pos", "done"}, caches).  Both may be live jits or Replayer handles —
+    or pass ``channel=`` (any ``ExecutionChannel``) instead.
 
     ``batched_prefill_fn(params, tokens[B,S], lengths[B])`` (optional)
     enables grouped admission; ``pipeline_depth`` bounds how many decode
     blocks may be in flight before the frontier must drain.
     """
 
-    def __init__(self, params, prefill_fn, fused_decode_fn, *, n_slots: int,
-                 cache_len: int, block_k: int, eos_id: int = 2,
+    def __init__(self, params, prefill_fn=None, fused_decode_fn=None, *,
+                 n_slots: int, cache_len: int, block_k: int, eos_id: int = 2,
                  init_caches_fn=None, cache_batch_axes=None, netem=None,
                  spec_k: int = 3, speculate: bool = True,
                  pipeline_depth: int = 4, batched_prefill_fn=None,
-                 prefill_buckets: Sequence[int] = (8, 16, 32, 64, 128)):
-        self.params = params
-        self.prefill_fn = prefill_fn
-        self.batched_prefill_fn = batched_prefill_fn
-        self.fused_decode_fn = fused_decode_fn
-        self.block_k = block_k
-        self.cache_len = cache_len
-        self.eos_id = eos_id
-        self.netem = netem
-        self.slots = SlotTable(n_slots)
-        self.caches = init_caches_fn() if init_caches_fn else None
-        # per-leaf position of the batch axis (leading dims may be stage
-        # stacks); provided by the launcher from model.cache_axes
-        self._batch_axes = cache_batch_axes
-        self.requests: Dict[int, Request] = {}
-        self.pending: collections.deque = collections.deque()
-        self.queue = CommitQueue(self._channel, netem=netem, name="decode")
-        self.spec = HistorySpeculator(k=spec_k)
-        self.speculate = speculate
-        self.pipeline_depth = max(1, pipeline_depth)
-        self.prefill_buckets = tuple(sorted(prefill_buckets))
-        self.inflight: List[dict] = []     # unvalidated blocks (device futures)
-        self.stats = collections.Counter()
-        self._slot_tokens = np.zeros(n_slots, np.int32)
-        # device-chained decode inputs; None => host metastate authoritative
-        self._dev_tokens = None
-        self._dev_pos = None
-        self._last_block_out = None
+                 prefill_buckets: Sequence[int] = (8, 16, 32, 64, 128),
+                 channel: Optional[ExecutionChannel] = None,
+                 stream_name: str = "stream0"):
+        if channel is None:
+            if prefill_fn is None or fused_decode_fn is None:
+                raise ValueError("Engine needs either channel= or both "
+                                 "prefill_fn and fused_decode_fn")
+            channel = LiveChannel(prefill_fn, fused_decode_fn,
+                                  batched_prefill_fn)
+        self.scheduler = Scheduler(netem=netem, spec_k=spec_k)
+        self.stream = self.scheduler.add_stream(
+            stream_name, channel, params, n_slots=n_slots,
+            cache_len=cache_len, block_k=block_k, eos_id=eos_id,
+            init_caches_fn=init_caches_fn,
+            cache_batch_axes=cache_batch_axes, speculate=speculate,
+            pipeline_depth=pipeline_depth, prefill_buckets=prefill_buckets)
+        self.channel = channel
+        self.frontier = self.scheduler.frontier
+        self.fixed_prompt_len = channel.fixed_prompt_len
+        self.registry_client = None
 
-    # ------------------------------------------------------------ channel --
-    def _channel(self, op: Op):
-        """Device-side execution of one interaction (the 'client GPU')."""
-        if op.kind == "write":      # dispatch a fused decode block
-            self._dispatch_block()
-            return None
-        if op.kind == "read":       # done mask + tokens: an in-flight future
-            return self._last_block_out
-        return None
+    # ------------------------------------------------- stream pass-through --
+    @property
+    def params(self):
+        return self.stream.params
 
-    def _dispatch_block(self):
-        if self._dev_tokens is None:   # re-seed the chain from host metastate
-            self._dev_tokens = jnp.asarray(self._slot_tokens)
-            self._dev_pos = jnp.asarray(self.slots.pos)
-        out, self.caches = self.fused_decode_fn(
-            self.params, self._dev_tokens, self._dev_pos, self.caches)
-        # chain the NEXT block's inputs off this block's device outputs:
-        # nothing is read back (the fused kernel freezes finished rows, so
-        # tokens[:, -1]/pos are exactly what a host round trip would feed)
-        self._dev_tokens = out["tokens"][:, -1]
-        self._dev_pos = out["pos"]
-        self._last_block_out = out
-        self.stats["blocks_dispatched"] += 1
+    @property
+    def stats(self):
+        return self.stream.stats
 
-    def _materialize(self, out):
-        """Host←device transfer of one block's metastate (tokens/done/pos).
-        Call sites account ``stats['host_syncs']`` — a frontier drain is ONE
-        stall no matter how many blocks it validates."""
-        return (np.asarray(out["tokens"]), np.asarray(out["done"]),
-                np.asarray(out["pos"]))
+    @property
+    def spec(self):
+        return self.scheduler.spec
+
+    @property
+    def slots(self):
+        return self.stream.slots
+
+    @property
+    def caches(self):
+        return self.stream.caches
+
+    @property
+    def requests(self):
+        return self.stream.requests
+
+    @property
+    def pending(self):
+        return self.stream.pending
+
+    @property
+    def queue(self):
+        return self.stream.queue
+
+    @property
+    def inflight(self):
+        return self.stream.inflight
+
+    @property
+    def pipeline_depth(self):
+        return self.stream.pipeline_depth
+
+    @property
+    def speculate(self):
+        return self.stream.speculate
 
     # ------------------------------------------------------------- public --
     def submit(self, prompt: List[int], max_new: int) -> int:
-        rid = len(self.requests)
-        self.requests[rid] = Request(rid, list(prompt), max_new,
-                                     submit_t=time.time())
-        self.pending.append(rid)
-        return rid
+        return self.stream.submit(prompt, max_new)
 
-    # ---------------------------------------------------------- admission --
-    def _admit(self):
-        if not self.pending or not self.slots.done.any():
-            return
-        if self.inflight:
-            # admission changes the decode batch and re-seeds the device
-            # chain from host metastate — which is STALE while blocks are
-            # in flight (tails apply at the frontier).  Drain first.
-            self.validate()
-        group = []
-        while self.pending:
-            rid = self.pending[0]
-            req = self.requests[rid]
-            slot = self.slots.alloc(rid, len(req.prompt))
-            if slot is None:
-                break
-            self.pending.popleft()
-            group.append((req, slot))
-        if not group:
-            return
-        self._dev_tokens = None            # host metastate changes below
-        if self.batched_prefill_fn is None:
-            for req, slot in group:
-                self._prefill_into_slot(req, slot)
-        else:
-            for plen, members in sorted(self._bucketize(group).items()):
-                self._prefill_group(members, plen)
-        self.stats["admitted"] += len(group)
+    def step_block(self) -> int:
+        return self.stream.step_block()
 
-    def _bucketize(self, group):
-        """Group (request, slot) pairs by padded prompt length so each
-        bucket is ONE prefill dispatch (and one jit shape)."""
-        buckets: Dict[int, list] = {}
-        for req, slot in group:
-            plen = len(req.prompt)
-            padded = next((b for b in self.prefill_buckets if b >= plen),
-                          plen)
-            padded = max(min(padded, self.cache_len), plen)
-            buckets.setdefault(padded, []).append((req, slot))
-        return buckets
-
-    def _prefill_group(self, members, padded_len: int):
-        """One dispatch for a whole bucket.  Right padding is sound: each
-        row's next token is read at its true last position and decode masks
-        cache rows >= pos, so pad garbage in the caches is inert."""
-        toks = np.zeros((len(members), padded_len), np.int32)
-        lens = np.empty(len(members), np.int32)
-        for row, (req, _slot) in enumerate(members):
-            toks[row, :len(req.prompt)] = req.prompt
-            lens[row] = len(req.prompt)
-        out, caches = self.batched_prefill_fn(
-            self.params, jnp.asarray(toks), jnp.asarray(lens))
-        firsts = np.asarray(out["next_tokens"])
-        for row, (req, slot) in enumerate(members):
-            self._slot_tokens[slot] = int(firsts[row])
-            req.generated.append(int(firsts[row]))
-        self._scatter_caches(caches, np.array([s for _, s in members]))
-        if self.netem is not None:
-            self.netem.round_trip()    # ONE synchronous commit per bucket
-        self.stats["prefill_dispatches"] += 1
-
-    def _scatter_caches(self, new_caches, slots_arr: np.ndarray):
-        """Vectorized scatter of a prefilled group into the slot caches:
-        one indexed ``.set`` per cache leaf (not per request per leaf)."""
-        flat_c, td = jax.tree.flatten(self.caches)
-        flat_n = jax.tree.leaves(new_caches)
-        axes = self._batch_axes or [0] * len(flat_c)
-        idx = jnp.asarray(slots_arr)
-        out_leaves = []
-        for c, n, ax in zip(flat_c, flat_n, axes):
-            sel = (slice(None),) * ax + (idx,)
-            out_leaves.append(c.at[sel].set(n.astype(c.dtype)))
-        self.caches = jax.tree.unflatten(td, out_leaves)
-
-    def _prefill_into_slot(self, req: Request, slot: int):
-        """Per-request path: exact shapes (required for recorded prefill
-        executables and for recurrent-state families)."""
-        batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
-        out, caches = self.prefill_fn(self.params, batch)
-        first = int(np.asarray(out["next_tokens"])[0])
-        self._slot_tokens[slot] = first
-        req.generated.append(first)
-        self._scatter_caches(caches, np.array([slot]))
-        if self.netem is not None:
-            self.netem.round_trip()     # prefill is a synchronous commit
-        self.stats["prefill_dispatches"] += 1
-
-    # ------------------------------------------------------------- decode --
-    def step_block(self):
-        """One fused block for all active slots; returns #active.
-
-        With speculation, up to ``pipeline_depth`` blocks stay in flight as
-        device futures (shipped via ``commit_async``); without it — or when
-        history is not k-confident — the block commits synchronously."""
-        if len(self.inflight) >= self.pipeline_depth:
-            self.validate()            # frontier full: drain before refill
-        self._admit()
-        active = int(self.slots.active_mask().sum())
-        if not active:
-            return 0
-        self.queue.write("decode.block")
-        self.queue.read("decode.done_mask")
-        ops = list(self.queue.queue)
-        pred = self.spec.predict(ops) if self.speculate else None
-        if pred is not None:
-            # speculative continuation: ship without blocking; token tails
-            # are applied (and validated) only at the commit frontier
-            self.queue.commit_async()
-            self.inflight.append({"ops": ops, "out": self._last_block_out,
-                                  "pred": pred})
-            self.stats["spec_blocks"] += 1
-        else:
-            if self.inflight:
-                self.validate()        # program order: drain, then block
-            self.queue.commit()
-            actual = self._materialize(self._last_block_out)
-            self.stats["host_syncs"] += 1
-            self._apply_block(actual, speculative=False)
-            self.spec.record(
-                ops, SOME_DONE if actual[1].any() else ALL_RUNNING)
-            self._retire(actual)
-            self.stats["sync_blocks"] += 1
-        return active
-
-    def validate(self):
-        """Commit frontier (§4.2 + §5): ONE metastate readback validates
-        every in-flight block in order.  A mispredict — some sequence
-        finished inside the pipeline — applies the offending block with EOS
-        honored and simply DROPS the speculative tail: metastate-only
-        rollback, no device work is redone."""
-        ok = True
-        if self.inflight:
-            pipeline, self.inflight = self.inflight, []
-            self.stats["host_syncs"] += 1      # one stall for the drain
-            if self.netem is not None:
-                # the paper's metastate-only sync: done masks + token tails
-                n, k = self.slots.n_slots, self.block_k
-                self.netem.round_trip(
-                    send_bytes=64,
-                    recv_bytes=len(pipeline) * n * (4 * k + 5))
-            for b_idx, blk in enumerate(pipeline):
-                actual = self._materialize(blk["out"])
-                outcome = SOME_DONE if actual[1].any() else ALL_RUNNING
-                self.spec.record(blk["ops"], outcome)
-                if blk["pred"] != outcome:
-                    self.stats["mispredicts"] += 1
-                    self._apply_block(actual, speculative=False)
-                    self._retire(actual)
-                    self._dev_tokens = None    # chain built on a lie
-                    self.stats["dropped_blocks"] += len(pipeline) - b_idx - 1
-                    ok = False
-                    break
-                self._apply_block(
-                    actual, speculative=outcome == ALL_RUNNING)
-                self._retire(actual)
-                self.stats["validated_blocks"] += 1
-        # frontier clean: commit generated tails
-        for req in self.requests.values():
-            req.committed = len(req.generated)
-        self.slots.committed_pos[:] = self.slots.pos
-        return ok
-
-    # ------------------------------------------------------------ helpers --
-    def _apply_block(self, actual, speculative: bool):
-        """Extend per-request tails from one block's metastate.  Mask math
-        is vectorized; only the list extends touch Python objects."""
-        tokens, done, newpos = actual
-        n = self.slots.n_slots
-        live = self.slots.active_mask()
-        if not live.any():
-            return
-        k = tokens.shape[1]
-        cut = np.full(n, k, np.int64)
-        if not speculative:
-            iseos = tokens[:n] == self.eos_id
-            hit = iseos.any(axis=1) & np.asarray(done[:n], bool)
-            if hit.any():
-                cut[hit] = iseos[hit].argmax(axis=1) + 1
-        last = tokens[np.arange(n), cut - 1]
-        for i in np.flatnonzero(live):
-            req = self.requests[int(self.slots.request_id[i])]
-            req.generated.extend(int(t) for t in tokens[i, :cut[i]])
-        self._slot_tokens[live] = last[live]
-        self.slots.pos[live] = np.asarray(newpos)[:n][live]
-
-    def _retire(self, actual):
-        _tokens, done, _ = actual
-        done = np.asarray(done[: self.slots.n_slots], bool)
-        for i in np.flatnonzero(self.slots.active_mask()):
-            req = self.requests[int(self.slots.request_id[i])]
-            if not (done[i] or len(req.generated) >= req.max_new):
-                continue
-            if done[i]:
-                g = np.asarray(req.generated)
-                eos = np.flatnonzero(g == self.eos_id)
-                if eos.size:                   # truncate at first EOS
-                    req.generated = req.generated[:int(eos[0]) + 1]
-            req.generated = req.generated[:req.max_new]
-            req.done = True
-            req.finish_t = time.time()
-            self.slots.release(i)
-            self._dev_tokens = None            # slot table changed
-            self.stats["retired"] += 1
+    def validate(self) -> bool:
+        """Drain the commit frontier for this engine's stream."""
+        return self.frontier.drain(self.stream)
 
     def run(self, max_blocks: int = 10_000,
             validate_every: Optional[int] = None):
         """Serve until drained.  The frontier is visited every
         ``validate_every`` blocks (default: the pipeline depth)."""
-        validate_every = validate_every or self.pipeline_depth
+        validate_every = validate_every or self.stream.pipeline_depth
         b = 0
-        while (self.pending or not all(self.slots.done)) and b < max_blocks:
+        while self.stream.has_work() and b < max_blocks:
             self.step_block()
             b += 1
             if b % validate_every == 0:
                 self.validate()
         self.validate()
-        return {rid: r.generated for rid, r in self.requests.items()}
+        return self.stream.outputs()
 
 
 def cache_batch_axes_for(cfg) -> List[int]:

@@ -13,7 +13,6 @@ Norm scales, biases, gates and small tensors stay in their original dtype
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -16,8 +16,6 @@ Two pieces:
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ fp32 state of a 72B model is ~1.7 GB/chip.  No optax dependency.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

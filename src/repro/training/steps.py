@@ -8,17 +8,14 @@ serializes into recordings.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import model as M
 from repro.models.config import ModelConfig
-from repro.sharding import constrain
-from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.training.optimizer import AdamWConfig, adamw_update
 
 
 def cross_entropy(logits, labels, z_loss: float = 1e-4):

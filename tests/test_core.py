@@ -68,6 +68,20 @@ def test_deferral_preserves_program_order(ops):
         assert s.resolved
 
 
+def test_symbol_reresolution_raises():
+    """Satellite: a deferred read resolved twice would silently rewrite a
+    value the speculation machinery already acted on — it must raise."""
+    from repro.core.deferral import Symbol, SymbolReResolutionError
+    s = Symbol("reg0")
+    s.resolve(7)
+    assert s.value == 7
+    with pytest.raises(SymbolReResolutionError):
+        s.resolve(8)                  # different value: definitely a bug
+    with pytest.raises(SymbolReResolutionError):
+        s.resolve(7)                  # same value: still a program-order bug
+    assert s.value == 7               # first resolution stands
+
+
 def test_deferral_symbolic_data_dependency():
     dev = FakeDevice()
     dev.regs["cfg"] = 7
@@ -187,6 +201,29 @@ def test_metasync_split_merge_identity(seed):
     assert any("w" in k for k in data)
 
 
+def test_metastate_hints_match_tokens_not_substrings():
+    """Satellite regression: hint matching must split the path into tokens
+    — ``"id" in "hidden"`` / ``"count" in "encounter"`` used to classify
+    large float weight leaves as metastate."""
+    from repro.core.metasync import is_metastate
+    big = np.zeros((64, 256), np.float32)          # > META_MAX_ELEMS
+    # substring traps: 'hidden' contains 'id', 'encounter' contains 'count'
+    assert not is_metastate("['hidden']", big)
+    assert not is_metastate("['encounter_weights']", big)
+    assert not is_metastate("['slotted_embedding']", big)   # 'slot' substring
+    # true metastate tokens keep matching, incl. separators and plurals
+    small = np.zeros(8, np.int32)
+    for path in ("['pos']", "['committed_pos']", "['request_id']",
+                 "['done']", "['slots'][0]", "['rng_key']"):
+        assert is_metastate(path, small), path
+    # a weight leaf named 'hidden' must land in PROGRAM DATA end to end
+    tree = {"hidden": big, "pos": small}
+    meta, data = split(tree)
+    assert any("hidden" in k for k in data)
+    assert not any("hidden" in k for k in meta)
+    assert any("pos" in k for k in meta)
+
+
 def test_metasync_delta_smaller_than_full():
     tree = {"pos": np.arange(1024, dtype=np.int32),
             "step": np.int32(0),
@@ -232,7 +269,6 @@ def test_replayer_is_minimal():
     """The replayer module must not import model/config/training code —
     the paper's tiny-TCB requirement."""
     import repro.core.replay as rp
-    import sys
     src = open(rp.__file__).read()
     for forbidden in ("repro.models", "repro.configs", "repro.training",
                       "repro.serving"):

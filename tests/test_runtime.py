@@ -9,10 +9,8 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config, smoke_shrink
-from repro import compat
 from repro.data.pipeline import Prefetcher, SyntheticLM
 from repro.models import model as M
 from repro.runtime.checkpoint import CheckpointStore

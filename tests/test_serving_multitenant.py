@@ -1,0 +1,306 @@
+"""Layered serving stack: two model families through one Scheduler —
+per-stream bit-exactness vs solo serving, slot pressure, preemption with
+bit-exact resume, stalled-stream eviction, and the ExecutionChannel trust
+boundary / netem-billed transport."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_shrink
+from repro.core.channel import (ChannelCapabilityError, LiveChannel,
+                                NetemBilledChannel)
+from repro.core.netem import WIFI, NetworkEmulator
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import stream_kwargs
+from repro.models import model as M
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Scheduler
+from repro.sharding import rules_for
+from repro.training import steps as ST
+
+BLOCK_K = 4
+CACHE_LEN = 96
+N_SLOTS = 2
+
+
+def _family(arch, seed, decode_wrap=None):
+    """(cfg, params, channel, stream kwargs) for one model family.  The
+    channel is built once per call so solo and multi-tenant runs of the
+    same family share jitted executables (and compile cost)."""
+    cfg = smoke_shrink(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    rules = rules_for("serve", make_host_mesh(model=1).axis_names)
+    prefill = jax.jit(ST.make_prefill_step(cfg, rules, CACHE_LEN))
+    batched = None
+    if cfg.family in ("dense", "moe") and not cfg.sliding_window:
+        batched = jax.jit(ST.make_batched_prefill_step(cfg, rules, CACHE_LEN))
+    decode = jax.jit(
+        ST.make_fused_decode_step(cfg, rules, k=BLOCK_K, eos_id=2),
+        donate_argnums=(3,))
+    if decode_wrap is not None:
+        decode = decode_wrap(decode)
+    channel = LiveChannel(prefill, decode, batched)
+    kw = stream_kwargs(cfg, n_slots=N_SLOTS, cache_len=CACHE_LEN,
+                       block_k=BLOCK_K, eos_id=2, pipeline_depth=4)
+    return cfg, params, channel, kw
+
+
+def _prompts(cfg, n, seed, plen_range=(4, 12)):
+    rng = np.random.default_rng(seed)
+    return [list(rng.integers(3, cfg.vocab_size,
+                              int(rng.integers(*plen_range))))
+            for _ in range(n)]
+
+
+def test_two_families_concurrent_bit_exact():
+    """ISSUE-3 acceptance: an attention family (speculating) and a
+    recurrent ssm family (speculation gated off) served CONCURRENTLY
+    through one Scheduler produce exactly the tokens each produces when
+    served alone."""
+    dense = _family("qwen2.5-3b", seed=0)
+    ssm = _family("xlstm-350m", seed=1)
+    assert ssm[3]["speculate"] is False        # family gate, not caller's
+
+    workloads = {"dense": (dense, _prompts(dense[0], 4, 21)),
+                 "ssm": (ssm, _prompts(ssm[0], 4, 22))}
+    solo = {}
+    for name, ((cfg, params, channel, kw), prompts) in workloads.items():
+        eng = Engine(params, channel=channel, **kw)
+        for p in prompts:
+            eng.submit(p, 14)
+        solo[name] = eng.run()
+
+    sched = Scheduler()
+    for name, ((cfg, params, channel, kw), prompts) in workloads.items():
+        sched.add_stream(name, channel, params, **kw)
+        for p in prompts:
+            sched.submit(name, p, 14)
+    multi = sched.run()
+
+    assert multi["dense"] == solo["dense"]
+    assert multi["ssm"] == solo["ssm"]
+    # the dense stream really speculated; the recurrent one never did
+    assert sched.streams["dense"].stats["spec_blocks"] > 0
+    assert sched.streams["ssm"].stats["spec_blocks"] == 0
+    # shared speculator, isolated histories: every key carries its stream
+    assert all(k.split("::")[0] in ("dense", "ssm")
+               for k in sched.spec.history)
+    for ex in sched.streams.values():
+        for req in ex.requests.values():
+            assert req.done and req.committed == len(req.generated)
+
+
+def test_multitenant_syncs_match_solo():
+    """The frontier stays the ONLY host<->device sync under multi-tenancy:
+    each stream's host-sync count equals its solo-serving count (no extra
+    cross-stream stalls)."""
+    dense = _family("qwen2.5-3b", seed=0)
+    prompts = _prompts(dense[0], 4, 31)
+
+    cfg, params, channel, kw = dense
+    eng = Engine(params, channel=channel, **kw)
+    for p in prompts:
+        eng.submit(p, 12)
+    solo_out = eng.run()
+    solo_syncs = eng.stats["host_syncs"]
+
+    sched = Scheduler()
+    sched.add_stream("a", channel, params, **kw)
+    ssm = _family("xlstm-350m", seed=1)
+    sched.add_stream("b", ssm[2], ssm[1], **ssm[3])
+    for p in prompts:
+        sched.submit("a", p, 12)
+    for p in _prompts(ssm[0], 3, 32):
+        sched.submit("b", p, 12)
+    multi = sched.run()
+    assert multi["a"] == solo_out
+    assert sched.streams["a"].stats["host_syncs"] == solo_syncs
+    # every readback in the run is accounted at the frontier
+    total = sum(ex.stats["host_syncs"] for ex in sched.streams.values())
+    assert sched.frontier.stats["host_syncs"] == total
+
+
+def test_slot_pressure_defers_admission():
+    """A global ``max_live_slots`` budget applies back-pressure across
+    tenants without changing any stream's tokens."""
+    a = _family("qwen2.5-3b", seed=0)
+    prompts_a = _prompts(a[0], 3, 41)
+    prompts_b = _prompts(a[0], 3, 42)
+
+    solo = {}
+    for key, prompts in (("a", prompts_a), ("b", prompts_b)):
+        eng = Engine(a[1], channel=a[2], **a[3])
+        for p in prompts:
+            eng.submit(p, 10)
+        solo[key] = eng.run()
+
+    sched = Scheduler(max_live_slots=2)
+    sched.add_stream("a", a[2], a[1], **a[3])
+    sched.add_stream("b", a[2], a[1], **a[3])
+    for p in prompts_a:
+        sched.submit("a", p, 10)
+    for p in prompts_b:
+        sched.submit("b", p, 10)
+    outs = sched.run()
+    assert outs["a"] == solo["a"] and outs["b"] == solo["b"]
+    assert sched.live_slots() == 0
+    deferred = sum(ex.stats["admissions_deferred"]
+                   for ex in sched.streams.values())
+    assert deferred > 0
+
+
+def test_preempt_resume_bit_exact():
+    """Eviction mid-serve, then resume: committed tails survive, evicted
+    requests re-prefill ``prompt + generated[:-1]`` and finish with
+    exactly the tokens of an uninterrupted run (deterministic decode)."""
+    cfg, params, channel, kw = _family("qwen2.5-3b", seed=0)
+    prompts = _prompts(cfg, 3, 51)
+
+    eng = Engine(params, channel=channel, **kw)
+    for p in prompts:
+        eng.submit(p, 16)
+    reference = eng.run()
+
+    sched = Scheduler()
+    sched.add_stream("s", channel, params, **kw)
+    for p in prompts:
+        sched.submit("s", p, 16)
+    for _ in range(3):                 # partial progress, blocks in flight
+        sched.step()
+    evicted = sched.preempt("s")
+    assert evicted                      # something was actually running
+    assert sched.streams["s"].slots.done.all()
+    assert sched.stats["preemptions"] == 1
+    outs = sched.run()
+    assert outs["s"] == reference
+
+
+def _frozen_pos_wrap(base):
+    """A 'hung device': blocks return but positions never advance and no
+    sequence ever finishes — the stall the scheduler must evict."""
+    def fn(params, toks, pos, caches):
+        out, caches = base(params, toks, pos, caches)
+        return {"tokens": out["tokens"], "pos": pos,
+                "done": jnp.zeros_like(out["done"])}, caches
+    return fn
+
+
+def test_stalled_stream_evicted_healthy_stream_unaffected():
+    healthy = _family("qwen2.5-3b", seed=0)
+    frozen = _family("qwen2.5-3b", seed=1,
+                     decode_wrap=lambda d: _frozen_pos_wrap(d))
+    prompts_h = _prompts(healthy[0], 2, 61)
+
+    eng = Engine(healthy[1], channel=healthy[2], **healthy[3])
+    for p in prompts_h:
+        eng.submit(p, 8)
+    solo = eng.run()
+
+    sched = Scheduler(stall_limit=2)
+    sched.add_stream("healthy", healthy[2], healthy[1], **healthy[3])
+    sched.add_stream("frozen", frozen[2], frozen[1], **frozen[3])
+    for p in prompts_h:
+        sched.submit("healthy", p, 8)
+    for p in _prompts(frozen[0], 2, 62):
+        sched.submit("frozen", p, 200)
+    outs = sched.run(max_blocks=40)
+    assert sched.stats["preemptions"] >= 1
+    assert sched.streams["frozen"].stats["evicted_requests"] >= 1
+    assert outs["healthy"] == solo                  # isolation held
+    assert all(r.done for r in sched.streams["healthy"].requests.values())
+    # the frozen stream never legitimately finished a request
+    assert not any(r.done and not r.failed
+                   for r in sched.streams["frozen"].requests.values())
+
+
+def test_replay_channel_preemption_unsupported():
+    """A fixed-prompt-shape channel cannot resume evicted prefixes; the
+    stream must refuse eviction loudly rather than corrupt requests."""
+    from repro.serving.executor import PreemptionUnsupportedError
+    cfg, params, channel, kw = _family("qwen2.5-3b", seed=0)
+    pinned = LiveChannel(channel._prefill, channel._decode,
+                         fixed_prompt_len=8)
+    sched = Scheduler()
+    sched.add_stream("s", pinned, params, **kw)
+    sched.submit("s", list(range(3, 11)), 8)
+    sched.step()
+    with pytest.raises(PreemptionUnsupportedError):
+        sched.preempt("s")
+
+
+def test_stalled_pinned_channel_does_not_crash_scheduler():
+    """Regression: auto-eviction of a stalled stream whose channel pins
+    the prefill shape (replay mode) must NOT propagate
+    PreemptionUnsupportedError and abort the other tenants — the stream
+    is left in place and marked unevictable."""
+    healthy = _family("qwen2.5-3b", seed=0)
+    frozen = _family("qwen2.5-3b", seed=1,
+                     decode_wrap=lambda d: _frozen_pos_wrap(d))
+    pinned = LiveChannel(frozen[2]._prefill, frozen[2]._decode,
+                         fixed_prompt_len=8)
+    prompts_h = _prompts(healthy[0], 2, 81)
+
+    eng = Engine(healthy[1], channel=healthy[2], **healthy[3])
+    for p in prompts_h:
+        eng.submit(p, 8)
+    solo = eng.run()
+
+    sched = Scheduler(stall_limit=2)
+    sched.add_stream("healthy", healthy[2], healthy[1], **healthy[3])
+    sched.add_stream("pinned", pinned, frozen[1], **frozen[3])
+    for p in prompts_h:
+        sched.submit("healthy", p, 8)
+    for _ in range(2):
+        sched.submit("pinned", list(range(3, 11)), 200)
+    outs = sched.run(max_blocks=40)         # must not raise
+    assert sched.stats["eviction_unsupported"] == 1
+    assert sched.stats["preemptions"] == 0
+    assert outs["healthy"] == solo
+
+
+def test_netem_billed_channel_logs_and_bills():
+    """The record/emulation transport: every dispatch is billed to the
+    emulated link (async — dispatches never stall) and logged as the
+    interaction trace, with identical served tokens."""
+    cfg, params, channel, kw = _family("qwen2.5-3b", seed=0)
+    prompts = _prompts(cfg, 3, 71)
+
+    eng = Engine(params, channel=channel, **kw)
+    for p in prompts:
+        eng.submit(p, 10)
+    reference = eng.run()
+
+    net = NetworkEmulator(WIFI)
+    billed = NetemBilledChannel(channel, net)
+    eng2 = Engine(params, channel=billed, **kw)
+    for p in prompts:
+        eng2.submit(p, 10)
+    outs = eng2.run()
+    assert outs == reference
+    dispatches = eng2.stats["blocks_dispatched"] + \
+        eng2.stats["prefill_dispatches"]
+    assert len(billed.log) == dispatches
+    assert net.async_trips == dispatches and net.round_trips == 0
+    assert net.bytes_sent == dispatches * NetemBilledChannel.DISPATCH_BYTES
+    steps = {row[0] for row in billed.log}
+    assert "decode_block" in steps and steps <= {
+        "prefill", "batched_prefill", "decode_block"}
+
+
+def test_channel_capability_errors():
+    ch = LiveChannel(lambda p, b: None, lambda p, t, po, c: None)
+    assert not ch.supports_batched_prefill
+    with pytest.raises(ChannelCapabilityError):
+        ch.batched_prefill(None, None, None)
+
+
+def test_channel_module_is_model_free():
+    """Trust boundary: the channel module (the replay channel's home) must
+    not import model/config/training/serving code — a replay-channel
+    stream reaches decode with only verified executables in the TCB."""
+    import repro.core.channel as ch
+    src = open(ch.__file__).read()
+    for forbidden in ("repro.models", "repro.configs", "repro.training",
+                      "repro.serving"):
+        assert forbidden not in src

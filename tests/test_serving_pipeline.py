@@ -195,3 +195,33 @@ def test_replayer_validates_args_and_dispatches_on_avals():
     before = rp.stats["executions"]
     rp.warm("double")
     assert rp.stats["executions"] == before + 2
+
+
+def test_replayer_dispatches_on_dtype_when_shapes_collide():
+    """Satellite: two recordings of one workload sharing a SHAPE but
+    differing in dtype must occupy distinct executable-cache entries —
+    the aval signature includes the dtype, so dispatch picks the right
+    executable and the error message names the near-miss."""
+    from repro.core.recorder import record
+    from repro.core.replay import ReplayArgumentError, Replayer
+
+    key = b"k"
+    rp = Replayer(key=key)
+    for dt, scale in ((jnp.float32, 2.0), (jnp.int32, 3)):
+        rec = record("scale", lambda x, scale=scale: x * scale,
+                     (jax.ShapeDtypeStruct((4,), dt),))
+        rec.sign_with(key)
+        rp.load(rec.to_bytes(), name="scale")
+    # same shape, different dtype -> different executable, right result
+    np.testing.assert_allclose(
+        np.asarray(rp.execute("scale", jnp.ones(4, jnp.float32))), 2.0)
+    np.testing.assert_array_equal(
+        np.asarray(rp.execute("scale", jnp.ones(4, jnp.int32))), 3)
+    # a third dtype misses BOTH variants; the message points at the dtype
+    # (the first differing leaf), not the shape
+    with pytest.raises(ReplayArgumentError) as ei:
+        rp.execute("scale", jnp.ones(4, jnp.float16))
+    msg = str(ei.value)
+    assert "float16[4]" in msg                      # what the caller sent
+    assert "recorded" in msg and "first mismatch at leaf 0" in msg
+    assert "float32[4]" in msg and "int32[4]" in msg  # both near-misses

@@ -4,10 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 from conftest import given, settings, st
-from jax.sharding import PartitionSpec as P
 
-from repro.analysis.hlo import (Analyzer, _shape_bytes, _wire_bytes, analyze,
-                                parse_module)
+from repro.analysis.hlo import _shape_bytes, _wire_bytes, analyze
 from repro.sharding import rules_for, spec
 
 
@@ -123,7 +121,5 @@ ENTRY %main (x: f32[4]) -> f32[4] {
 
 
 def test_analyzer_collectives_in_loops_multiply():
-    import re
-    from repro.launch.mesh import make_host_mesh
     if len(jax.devices()) < 2:
         pytest.skip("needs >1 device (covered by subprocess test)")

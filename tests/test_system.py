@@ -12,7 +12,6 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, smoke_shrink
-from repro import compat
 from repro.models import model as M
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
