@@ -23,6 +23,7 @@ from repro.core.recorder import mesh_descriptor, record
 from repro.core.recording import Recording
 from repro.launch.mesh import make_host_mesh
 from repro.launch.record import build_step, static_meta_for
+from repro.record import RecordingSession
 from repro.registry import (RecordingStore, RegistryClient, RegistryService,
                             key_for)
 from repro.sharding import rules_for
@@ -32,8 +33,10 @@ KEY = b"registry-bench-key"
 
 def _record_once():
     """One real recording (cody-mnist smoke prefill) shared by every
-    scenario; its manifest carries the true record wall time that cold
-    fetches bill into virtual time."""
+    scenario — made through a DISTRIBUTED wifi recording session (all
+    passes on), so its manifest carries the realistic record cost (compile
+    wall time + session virtual time) that cold fetches bill into virtual
+    time.  The bench READS that recorded cost; it never recomputes it."""
     cfg = smoke_shrink(get_config("cody-mnist"))
     mesh = make_host_mesh(model=1)
     rules = rules_for("serve", mesh.axis_names)
@@ -45,7 +48,8 @@ def _record_once():
                       {**static, "config_fp": cfg.fingerprint()},
                       fingerprint(mesh_descriptor(mesh)))
     rec = record(reg_key, fn, specs, mesh=mesh, donate_argnums=donate,
-                 config_fingerprint=cfg.fingerprint(), static_meta=static)
+                 config_fingerprint=cfg.fingerprint(), static_meta=static,
+                 session=RecordingSession.for_profile(WIFI))
     rec.sign_with(KEY)
     return reg_key, rec
 
@@ -115,7 +119,13 @@ def main(quick: bool = False, out_json: str = "BENCH_registry.json"):
     delta = by[("wifi", "delta_rerecord")]
     summary = {
         "rows": rows,
+        # recorded cost, READ off the manifest the session populated (the
+        # bench never recomputes it): wall compile time + the distributed
+        # session's virtual protocol time
         "record_wall_s": round(rec.manifest["record_wall_s"], 3),
+        "record_virtual_s": round(rec.manifest["record_virtual_s"], 3),
+        "recorded_cost_s": round(rec.manifest["record_wall_s"]
+                                 + rec.manifest["record_virtual_s"], 3),
         "wifi_warm_vs_cold_reduction":
             round(1.0 - warm["time_s"] / cold["time_s"], 4),
         "warm_zero_recording_rts": warm["recording_round_trips"] == 0,

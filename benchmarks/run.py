@@ -14,6 +14,17 @@ def _section(title):
     print(f"\n# === {title} ===", flush=True)
 
 
+def _recording_ablation_section(quick: bool):
+    _section("Recording session ablation: naive -> +deferral -> "
+             "+speculation -> +metasync (-> BENCH_recording.json)")
+    from benchmarks import recording_ablation_bench
+    for r in recording_ablation_bench.main(quick=quick):
+        print(f"recording_{r['stack'].lstrip('+')}_{r['net']},"
+              f"{r['virtual_time_s']*1e6:.0f},"
+              f"rts={r['blocking_rts']};async={r['async_rts']};"
+              f"MB={r['wire_MB']};bit_exact={r['bit_exact_vs_legacy']}")
+
+
 def _registry_section(quick: bool):
     _section("Registry: cold record vs warm hit vs delta re-record "
              "(-> BENCH_registry.json)")
@@ -49,8 +60,9 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: decode pipeline + multitenant + registry "
-                         "benches only, emit BENCH_decode.json + "
-                         "BENCH_multitenant.json + BENCH_registry.json")
+                         "+ recording-ablation benches only, emit "
+                         "BENCH_decode.json + BENCH_multitenant.json + "
+                         "BENCH_registry.json + BENCH_recording.json")
     args = ap.parse_args()
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -59,12 +71,14 @@ def main() -> None:
         _decode_pipeline_section(quick=True)
         _multitenant_section(quick=True)
         _registry_section(quick=True)
+        _recording_ablation_section(quick=True)
         print(f"\n# total bench wall time: {time.time()-t0:.1f}s")
         return
 
     _decode_pipeline_section(quick=args.quick)
     _multitenant_section(quick=args.quick)
     _registry_section(quick=args.quick)
+    _recording_ablation_section(quick=args.quick)
 
     _section("Paper Fig.7 + Table 1: recording delays (emulated networks)")
     from benchmarks import record_replay

@@ -26,11 +26,17 @@ _ids = itertools.count()
 
 
 class Symbol:
-    """A deferred read value (paper: symbolic register value)."""
+    """A deferred read value (paper: symbolic register value).
+
+    ``sid`` identifies the symbol within its queue/session.  Symbols made
+    through a ``CommitQueue`` get ids from that queue's own counter, so op
+    logs are deterministic per session; a bare ``Symbol(site)`` falls back
+    to a module-global counter (standalone use only — ids from that
+    counter leak across sessions and are NOT reproducible)."""
     __slots__ = ("sid", "site", "_value", "resolved")
 
-    def __init__(self, site: str):
-        self.sid = next(_ids)
+    def __init__(self, site: str, sid: Optional[int] = None):
+        self.sid = next(_ids) if sid is None else sid
         self.site = site
         self._value = None
         self.resolved = False
@@ -96,6 +102,10 @@ class CommitQueue:
         self.channel = channel
         self.netem = netem
         self.name = name
+        # symbol ids are scoped to THIS queue: two freshly built sessions
+        # replaying the same program produce identical op logs (a module-
+        # global counter leaked ids across sessions/tests)
+        self._sids = itertools.count()
         self.queue: List[Op] = []
         self.log: List[Op] = []            # committed interaction log
         self.commits = 0                   # blocking commits (1 RTT each)
@@ -108,7 +118,7 @@ class CommitQueue:
         self.deferred_total += 1
 
     def read(self, site: str) -> Symbol:
-        s = Symbol(site)
+        s = Symbol(site, sid=next(self._sids))
         self.queue.append(Op("read", site, symbol=s))
         self.deferred_total += 1
         return s
@@ -116,7 +126,7 @@ class CommitQueue:
     def poll(self, site: str, predicate_site: str = "") -> Symbol:
         """Offloaded polling loop (§4.3): executes device-side in the same
         commit; the read value is the loop's final state / trip count."""
-        s = Symbol(site)
+        s = Symbol(site, sid=next(self._sids))
         self.queue.append(Op("poll", site, payload=predicate_site, symbol=s))
         self.deferred_total += 1
         return s

@@ -21,6 +21,9 @@ WIFI = NetProfile("wifi", 0.020, 80e6 / 8)
 CELLULAR = NetProfile("cellular", 0.050, 40e6 / 8)
 LOCAL = NetProfile("local", 2e-6, 10e9)  # same-SoC reference
 
+# the one name -> profile registry every CLI/bench resolves --net through
+PROFILES = {p.name: p for p in (LOCAL, WIFI, CELLULAR)}
+
 
 class NetworkEmulator:
     def __init__(self, profile: NetProfile):
@@ -96,3 +99,24 @@ class NetworkEmulator:
     def snapshot(self) -> dict:
         return {"time_s": self.virtual_time_s, "round_trips": self.round_trips,
                 "bytes": self.bytes_sent + self.bytes_received}
+
+    # -- span accounting ---------------------------------------------------
+    # ``reset()`` is a global zeroing — unusable by nested consumers (a
+    # session pass, registry billing) that need to measure their OWN span
+    # of an emulator shared with everyone else.  checkpoint()/delta() are
+    # non-destructive: take a mark, do work, subtract.
+    def checkpoint(self) -> dict:
+        """Full counter snapshot; pass to ``delta()`` to measure a span
+        without clobbering global totals."""
+        return {"time_s": self.virtual_time_s,
+                "round_trips": self.round_trips,
+                "async_trips": self.async_trips,
+                "bytes_sent": self.bytes_sent,
+                "bytes_received": self.bytes_received}
+
+    def delta(self, mark: dict) -> dict:
+        """Counters accumulated since ``mark`` (a ``checkpoint()`` result).
+        Leaves every global total untouched; spans may nest or overlap
+        freely."""
+        now = self.checkpoint()
+        return {k: now[k] - mark.get(k, 0) for k in now}

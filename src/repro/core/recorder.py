@@ -1,10 +1,20 @@
 """The recorder — CODY's "cloud dryrun service" on the JAX AOT path.
 
-``record()`` exercises the full framework stack (model code, sharding rules,
-XLA) exactly once per (workload x shape x mesh): it lowers and compiles the
-step function against abstract inputs (ShapeDtypeStructs — the paper's
-dryrun needs no real data, §5 "metastate only"), serializes the executable,
-and signs the result.  Replay needs none of this machinery.
+``compile_artifact()`` exercises the full framework stack (model code,
+sharding rules, XLA) exactly once per (workload x shape x mesh): it lowers
+and compiles the step function against abstract inputs (ShapeDtypeStructs —
+the paper's dryrun needs no real data, §5 "metastate only"), serializes the
+executable, and builds the signable Recording.  Replay needs none of this
+machinery.
+
+``record()`` is the paper's full record phase: it runs the compile through
+an in-process degenerate ``repro.record.RecordingSession`` (device proxy and
+cloud dryrun co-located, all three optimization passes on, nothing billed) —
+same Recording output as ``compile_artifact``, plus the session fields
+(``record_virtual_s`` and per-pass counters, zero for local records).  The
+distributed record phase — device and cloud on opposite ends of an emulated
+link — lives in ``repro.record`` and produces the same artifact with real
+wire accounting.
 """
 from __future__ import annotations
 
@@ -29,10 +39,10 @@ def mesh_descriptor(mesh) -> dict:
     return {"shape": list(mesh.devices.shape), "axes": list(mesh.axis_names)}
 
 
-def record(name: str, fn, args_abstract: Sequence[Any], *,
-           mesh=None, in_shardings=None, out_shardings=None,
-           donate_argnums=(), config_fingerprint: str = "",
-           static_meta: Optional[dict] = None) -> Recording:
+def compile_artifact(name: str, fn, args_abstract: Sequence[Any], *,
+                     mesh=None, in_shardings=None, out_shardings=None,
+                     donate_argnums=(), config_fingerprint: str = "",
+                     static_meta: Optional[dict] = None) -> Recording:
     """Lower + compile + serialize ``fn`` into a signed-ready Recording."""
     t0 = time.time()
     kw = {}
@@ -74,3 +84,25 @@ def record(name: str, fn, args_abstract: Sequence[Any], *,
     }
     manifest["exec_fingerprint"] = fingerprint(payload)
     return Recording(manifest=manifest, payload=payload, trees=trees)
+
+
+def record(name: str, fn, args_abstract: Sequence[Any], *,
+           mesh=None, in_shardings=None, out_shardings=None,
+           donate_argnums=(), config_fingerprint: str = "",
+           static_meta: Optional[dict] = None, session=None) -> Recording:
+    """Record ``fn`` through a ``RecordingSession`` (the CODY two-party
+    record phase).  Without ``session`` this is the in-process degenerate
+    session — LOCAL co-located device+cloud, all passes on, nothing billed
+    — whose Recording is the same artifact ``compile_artifact`` builds.
+    Pass a session built over a real ``NetProfile`` (see
+    ``repro.record.RecordingSession.for_profile``) to bill the distributed
+    record protocol into its emulator and into the manifest."""
+    # lazy import: repro.record composes over this module's compile path
+    from repro.record import RecordingSession
+    sess = session if session is not None else RecordingSession.local()
+    return sess.record(name, fn, args_abstract, mesh=mesh,
+                       in_shardings=in_shardings,
+                       out_shardings=out_shardings,
+                       donate_argnums=donate_argnums,
+                       config_fingerprint=config_fingerprint,
+                       static_meta=static_meta)

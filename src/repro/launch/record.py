@@ -2,7 +2,14 @@
 publish them into the recording registry.
 
     python -m repro.launch.record --arch qwen2.5-3b --smoke \
-        --kinds prefill,decode --out /tmp/recordings --key secret
+        --kinds prefill,decode --out /tmp/recordings --key secret \
+        --net wifi --passes all
+
+Each record runs as a distributed ``RecordingSession`` (device proxy +
+cloud dryrun over the ``--net`` emulated link) with the paper's record
+optimizations selected by ``--passes`` (any of deferral, speculation,
+metasync; "all"/"none"), and prints the session report: virtual record
+time, blocking/async round trips, wire bytes, per-pass accounting.
 
 Recordings are identified by ``registry.key_for(arch, kind, shapes,
 mesh_fp)`` — the same key the serve CLI fetches by and the replayer
@@ -21,12 +28,25 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, smoke_shrink
 from repro.core.attest import fingerprint
+from repro.core.netem import PROFILES
 from repro.core.recorder import mesh_descriptor, record
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
+from repro.record import RecordingSession, resolve_passes
 from repro.registry import RecordingStore, RegistryService, key_arch, key_for
 from repro.sharding import rules_for
 from repro.training import steps as ST
+
+
+def format_session_report(rep: dict) -> str:
+    """One-line summary of a RecordingSession report for CLI output."""
+    mb = (rep["bytes_sent"] + rep["bytes_received"]) / 1e6
+    passes = "+".join(rep["passes"]) or "naive"
+    return (f"session[{rep['net']}|{passes}]: "
+            f"{rep['virtual_time_s']:.2f}s virtual, "
+            f"{rep['blocking_round_trips']} blocking / "
+            f"{rep['async_round_trips']} async RTs, {mb:.2f} MB, "
+            f"{rep['jobs']} jobs")
 
 
 def recording_name(arch: str, kind: str, extra: str = "") -> str:
@@ -87,6 +107,12 @@ def main(argv=None):
                          "prompts per request, so serve fetches batch-1 "
                          "prefill recordings)")
     ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--net", default="local", choices=sorted(PROFILES),
+                    help="emulated device<->cloud link the recording "
+                         "session runs over")
+    ap.add_argument("--passes", default="all",
+                    help="comma list of record-session optimization passes "
+                         "(deferral,speculation,metasync) | all | none")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -116,10 +142,14 @@ def main(argv=None):
         # one arch (e.g. smoke-shrunk vs full) must never share a key
         key = key_for(args.arch, kind,
                       {**static, "config_fp": cfg.fingerprint()}, mesh_fp)
+        # one two-party session per recording: fresh device proxy, fresh
+        # speculation history, per-recording report
+        session = RecordingSession.for_profile(
+            PROFILES[args.net], passes=resolve_passes(args.passes))
         rec = record(key, fn, specs, mesh=mesh,
                      donate_argnums=donate,
                      config_fingerprint=cfg.fingerprint(),
-                     static_meta=static)
+                     static_meta=static, session=session)
         path = os.path.join(args.out, recording_name(args.arch, kind))
         rec.save(path, signing_key)
         line = (f"recorded {kind}: {path} "
@@ -132,6 +162,7 @@ def main(argv=None):
                      f"{pub['chunks_new']} new / "
                      f"{pub['chunks_reused']} reused chunks)")
         print(line)
+        print("  " + format_session_report(session.report()))
 
 
 if __name__ == "__main__":

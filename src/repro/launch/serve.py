@@ -55,7 +55,12 @@ def _registry_channel(cfg, mesh, rules, *, registry_dir: str, key: bytes,
                                 RecordingStore, key_arch, key_for)
 
     store = RecordingStore(registry_dir, key=key)
-    service = RegistryService(store, signing_key=key)
+    # record-on-miss runs the CODY two-party session over the same link
+    # profile the client fetches through — cold boots bill realistic
+    # distributed record cost, not just compile wall time
+    service = RegistryService(
+        store, signing_key=key,
+        record_profile=netem.profile if netem is not None else None)
     client = RegistryClient(service, netem=netem, key=key)
     mesh_fp = fingerprint(mesh_descriptor(mesh))
     config_fp = cfg.fingerprint()
@@ -92,7 +97,11 @@ def _registry_channel(cfg, mesh, rules, *, registry_dir: str, key: bytes,
                 reg_key = max(found, key=lambda fk: store.entry(fk)["meta"]
                               .get("published_s", 0.0))
             elif record_on_miss:
-                def record_fn(kind=kind, static=static, reg_key=reg_key):
+                def record_fn(session=None, kind=kind, static=static,
+                              reg_key=reg_key):
+                    # ``session`` is supplied by the service's lease: the
+                    # miss records through a distributed RecordingSession
+                    # over the service's configured profile
                     fn, specs, donate = build_step(
                         cfg, kind, rules, cache_len=cache_len,
                         block_k=block_k, batch=static["batch"],
@@ -100,7 +109,7 @@ def _registry_channel(cfg, mesh, rules, *, registry_dir: str, key: bytes,
                     return record(reg_key, fn, specs, mesh=mesh,
                                   donate_argnums=donate,
                                   config_fingerprint=cfg.fingerprint(),
-                                  static_meta=static)
+                                  static_meta=static, session=session)
         items.append((reg_key, record_fn))
     rp = Replayer(key=key)
     channel = client.into_channel(rp, items[0], items[1], warm=True)
@@ -264,17 +273,17 @@ def main(argv=None):
     ap.add_argument("--record-on-miss", action="store_true",
                     help="on registry miss, record through the service's "
                          "single-flight lease")
+    from repro.core.netem import PROFILES
     ap.add_argument("--net", default="none",
-                    choices=["none", "wifi", "cellular", "local"],
+                    choices=["none"] + sorted(PROFILES),
                     help="emulated network profile for registry fetches")
     ap.add_argument("--key", default="cody-demo-key")
     args = ap.parse_args(argv)
 
     netem = None
     if args.net != "none":
-        from repro.core.netem import CELLULAR, LOCAL, WIFI, NetworkEmulator
-        netem = NetworkEmulator(
-            {"wifi": WIFI, "cellular": CELLULAR, "local": LOCAL}[args.net])
+        from repro.core.netem import NetworkEmulator
+        netem = NetworkEmulator(PROFILES[args.net])
 
     if args.streams:
         return _serve_multi(args, netem)

@@ -1,0 +1,21 @@
+"""repro.record — the CODY distributed recording session.
+
+Models the paper's two-party record phase: a ``DeviceProxy`` (GPU
+hardware: executes committed op batches, holds readbacks, mirrors synced
+state) and a ``CloudDryrun`` (GPU software: JAX lower/compile stack +
+register-access interaction plan) collaborate through a
+``RecordingSession`` over a ``NetworkEmulator``, with the paper's three
+record-time optimizations — deferral (§4.1+4.3), speculation (§4.2),
+metastate-only sync (§5) — composed as stackable interceptor passes.
+"""
+from repro.record.cloud import CloudDryrun
+from repro.record.device import DeviceProxy, FlakyRegisterDevice
+from repro.record.session import (PASS_NAMES, DeferralPass, MetasyncPass,
+                                  RecordingSession, SpeculationPass,
+                                  WireLink, resolve_passes)
+
+__all__ = [
+    "CloudDryrun", "DeviceProxy", "FlakyRegisterDevice", "RecordingSession",
+    "DeferralPass", "SpeculationPass", "MetasyncPass", "WireLink",
+    "PASS_NAMES", "resolve_passes",
+]

@@ -118,8 +118,13 @@ class RegistryClient:
             self._bill_index_rpc(len(entry["chunks"]))
             self.stats["recording_round_trips"] += 1
             if self._net is not None:
+                # the cold cost a warm hit avoids: the cloud's compile wall
+                # time PLUS the distributed record session's virtual time
+                # (the device<->cloud protocol round trips; zero when the
+                # recording was made by a local in-process session)
                 self._net.virtual_time_s += \
-                    float(entry["meta"].get("record_wall_s", 0.0))
+                    float(entry["meta"].get("record_wall_s", 0.0)) + \
+                    float(entry["meta"].get("record_virtual_s", 0.0))
         else:
             entry = self._svc.entry(key)
             self._bill_index_rpc(len(entry["chunks"]))

@@ -17,6 +17,7 @@ Responsibilities:
 from __future__ import annotations
 
 import collections
+import inspect
 import threading
 import time
 from typing import Callable, Dict, Optional
@@ -63,15 +64,49 @@ def parts_to_recording_bytes(parts: Dict[str, bytes]) -> bytes:
 
 
 class RegistryService:
-    """Cloud registry front end over a ``RecordingStore``."""
+    """Cloud registry front end over a ``RecordingStore``.
 
-    def __init__(self, store: RecordingStore, *, signing_key: bytes):
+    ``record_profile`` selects the device<->cloud link a record-on-miss
+    session runs over (None = in-process degenerate session): the paper's
+    record phase is two-party, so a miss recorded for a wifi-attached
+    device bills the distributed protocol's real round trips and bytes
+    into the recording's manifest, and clients are charged that recorded
+    cost on the cold fetch.
+    """
+
+    def __init__(self, store: RecordingStore, *, signing_key: bytes,
+                 record_profile=None, record_passes="all"):
         self._store = store
         self._key = signing_key
+        self._record_profile = record_profile
+        self._record_passes = record_passes
         self._delta: Dict[str, DeltaSync] = {}
         self._lock = threading.Lock()
         self._leases: Dict[str, threading.Event] = {}
         self.stats = collections.Counter()
+
+    def _run_record_fn(self, record_fn: Callable) -> Recording:
+        """Run a record-on-miss through a ``RecordingSession`` when the
+        callable accepts one (the CODY two-party record over the
+        configured link); zero-arg record_fns keep working and record
+        through the in-process degenerate session themselves."""
+        try:
+            takes_session = "session" in \
+                inspect.signature(record_fn).parameters
+        except (TypeError, ValueError):
+            takes_session = False
+        if not takes_session:
+            return record_fn()
+        from repro.record import RecordingSession
+        if self._record_profile is not None:
+            session = RecordingSession.for_profile(
+                self._record_profile, passes=self._record_passes)
+        else:
+            session = RecordingSession.local(passes=self._record_passes)
+        rec = record_fn(session=session)
+        self.stats["record_virtual_s"] += \
+            session.report()["virtual_time_s"]
+        return rec
 
     # ------------------------------------------------------------ publish --
     def publish(self, key: str, rec: Recording) -> dict:
@@ -99,6 +134,9 @@ class RegistryService:
             "topology": rec.manifest.get("topology", ""),
             "config_fingerprint": rec.manifest.get("config_fingerprint", ""),
             "record_wall_s": rec.manifest.get("record_wall_s", 0.0),
+            # distributed-session record cost (zero for local records):
+            # what a cold record-on-miss fetch bills on top of wall time
+            "record_virtual_s": rec.manifest.get("record_virtual_s", 0.0),
             "published_s": time.time()})
         self.stats["publishes"] += 1
         return {"key": key, "version": entry["version"],
@@ -144,7 +182,7 @@ class RegistryService:
             if record_fn is None:
                 raise RegistryMissError(
                     f"'{key}' not in registry and no record_fn provided")
-            rec = record_fn()
+            rec = self._run_record_fn(record_fn)
             if not rec.signature:
                 rec.sign_with(self._key)
             self.stats["records"] += 1

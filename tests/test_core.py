@@ -82,6 +82,60 @@ def test_symbol_reresolution_raises():
     assert s.value == 7               # first resolution stands
 
 
+def test_externalization_commit_with_unresolved_symbol_mid_queue():
+    """Satellite edge case: an externalization-forced commit with an
+    UNRESOLVED symbol mid-queue — a later write's payload references an
+    earlier deferred read in the same batch.  In-order client execution
+    must resolve it on the fly; a symbol whose read was never enqueued
+    must surface as UnresolvedSymbolError, not ship garbage."""
+    from repro.core.deferral import Symbol, UnresolvedSymbolError
+    dev = FakeDevice()
+    dev.regs["cfg"] = 42
+    q = CommitQueue(dev.channel)
+    q.write("pwr", 1)
+    s1 = q.read("cfg")            # unresolved while queued
+    q.write("mirror", s1)         # data dependency on the mid-queue symbol
+    s2 = q.read("mirror")
+    q.write("probe", [s1, {"v": s1}])     # nested payload references
+    assert not s1.resolved        # still symbolic before externalization
+    q.flush()                     # externalization point -> one commit
+    assert s1.resolved and s2.resolved
+    assert s1.value == 42 and s2.value == 42
+    assert dev.regs["mirror"] == 42
+    assert dev.regs["probe"] == [42, {"v": 42}]
+    assert q.commits == 1         # 5 interactions, one round trip
+    # program order preserved through the symbolic resolution
+    assert [e[:2] for e in dev.exec_log] == [
+        ("write", "pwr"), ("read", "cfg"), ("write", "mirror"),
+        ("read", "mirror"), ("write", "probe")]
+    # a symbol from NOWHERE (its read is not in any batch) must raise
+    q2 = CommitQueue(FakeDevice().channel)
+    q2.write("y", Symbol("phantom"))
+    with pytest.raises(UnresolvedSymbolError):
+        q2.commit()
+
+
+def test_barrier_forced_commit_ordering_across_batches():
+    """Satellite edge case: explicit barriers split the op stream into
+    coalesced batches; the device must still observe the exact global
+    program order, and each barrier must cost exactly one round trip."""
+    dev = FakeDevice()
+    net = NetworkEmulator(WIFI)
+    q = CommitQueue(dev.channel, netem=net)
+    expect = []
+    for batch in range(3):
+        for i in range(4):
+            q.write(f"b{batch}_r{i}", batch * 10 + i)
+            expect.append(("write", f"b{batch}_r{i}"))
+        s = q.read(f"b{batch}_r0")
+        expect.append(("read", f"b{batch}_r0"))
+        q.flush()                 # barrier: forces the commit HERE
+        assert s.value == batch * 10      # resolved at its barrier
+    assert [e[:2] for e in dev.exec_log] == expect
+    assert q.commits == 3 and net.round_trips == 3
+    assert q.deferred_total == 15
+
+
 def test_deferral_symbolic_data_dependency():
     dev = FakeDevice()
     dev.regs["cfg"] = 7
