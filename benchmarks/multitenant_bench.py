@@ -1,13 +1,17 @@
-"""Multi-tenant serving benchmark — the ISSUE-3 acceptance artifact.
+"""Multi-tenant serving benchmark — the ISSUE-3 acceptance artifact,
+driven through ``repro.api``.
 
 Serves an attention family (speculating) and a recurrent ssm family
-(speculation gated off) first ALONE, then CONCURRENTLY through one
-Scheduler, and reports per-stream p50 request latency, speculation hit
-rate, and frontier syncs per token.  The acceptance bar: under
-multi-tenancy the frontier remains the only host<->device sync point —
-each stream's syncs-per-token is no worse than its single-tenant run —
-and the token streams are bit-exact across the two modes.  Results land
-in ``BENCH_multitenant.json`` so CI tracks the trajectory.
+(speculation gated off) first ALONE (``Workload.engine``), then
+CONCURRENTLY through one Scheduler (``Workspace.scheduler``), and
+reports per-stream p50 request latency, speculation hit rate, and
+frontier syncs per token.  The acceptance bar: under multi-tenancy the
+frontier remains the only host<->device sync point — each stream's
+syncs-per-token is no worse than its single-tenant run — and the token
+streams are bit-exact across the two modes (the workload memoizes its
+live channel and params, so solo and multi runs share the exact same
+compiled step functions and weights).  Results land in
+``BENCH_multitenant.json`` so CI tracks the trajectory.
 
     PYTHONPATH=src python -m benchmarks.multitenant_bench [--quick]
 """
@@ -17,40 +21,14 @@ import argparse
 import json
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_config, smoke_shrink
-from repro.core.channel import LiveChannel
-from repro.launch.mesh import make_host_mesh
-from repro.launch.serve import stream_kwargs
-from repro.models import model as M
-from repro.serving.engine import Engine
-from repro.serving.scheduler import Scheduler
-from repro.sharding import rules_for
-from repro.training import steps as ST
+from repro.api import Workspace
 
 BLOCK_K = 4
 CACHE_LEN = 128
 N_SLOTS = 4
 ARCHS = ("qwen2.5-3b", "xlstm-350m")
-
-
-def _family(arch, seed):
-    cfg = smoke_shrink(get_config(arch))
-    params = M.init_params(cfg, jax.random.PRNGKey(seed))
-    rules = rules_for("serve", make_host_mesh(model=1).axis_names)
-    prefill = jax.jit(ST.make_prefill_step(cfg, rules, CACHE_LEN))
-    batched = None
-    if cfg.family in ("dense", "moe") and not cfg.sliding_window:
-        batched = jax.jit(ST.make_batched_prefill_step(cfg, rules, CACHE_LEN))
-    decode = jax.jit(
-        ST.make_fused_decode_step(cfg, rules, k=BLOCK_K, eos_id=2),
-        donate_argnums=(3,))
-    channel = LiveChannel(prefill, decode, batched)
-    kw = stream_kwargs(cfg, n_slots=N_SLOTS, cache_len=CACHE_LEN,
-                       block_k=BLOCK_K, eos_id=2, pipeline_depth=4)
-    return cfg, params, channel, kw
 
 
 def _prompts(cfg, n, seed):
@@ -84,20 +62,23 @@ def _stream_row(name, ex, outs, wall_s):
 def main(quick: bool = False, out_json: str = "BENCH_multitenant.json"):
     requests = 4 if quick else 8
     max_new = 16 if quick else 32
-    fams = {arch: _family(arch, seed) for seed, arch in enumerate(ARCHS)}
-    prompts = {arch: _prompts(fams[arch][0], requests, 100 + i)
+    ws = Workspace()
+    wls = {arch: ws.workload(arch, cache_len=CACHE_LEN, block_k=BLOCK_K,
+                             batch=N_SLOTS) for arch in ARCHS}
+    prompts = {arch: _prompts(wls[arch].cfg, requests, 100 + i)
                for i, arch in enumerate(ARCHS)}
 
-    # warm-up: compile every shape both modes will hit
-    for arch, (cfg, params, channel, kw) in fams.items():
-        eng = Engine(params, channel=channel, **kw)
+    # warm-up: compile every shape both modes will hit (channels and
+    # params are memoized on the workloads, so this pays all jit cost)
+    for i, arch in enumerate(ARCHS):
+        eng = wls[arch].engine(seed=i)
         for p in prompts[arch]:
             eng.submit(p, max_new)
         eng.run()
 
     solo_rows = {}
-    for arch, (cfg, params, channel, kw) in fams.items():
-        eng = Engine(params, channel=channel, **kw)
+    for i, arch in enumerate(ARCHS):
+        eng = wls[arch].engine(seed=i)
         for p in prompts[arch]:
             eng.submit(p, max_new)
         t0 = time.time()
@@ -105,16 +86,19 @@ def main(quick: bool = False, out_json: str = "BENCH_multitenant.json"):
         solo_rows[arch] = _stream_row(arch, eng.stream, outs,
                                       time.time() - t0)
 
-    sched = Scheduler()
-    for arch, (cfg, params, channel, kw) in fams.items():
-        sched.add_stream(arch, channel, params, **kw)
+    # multi-tenant: same channels, same params (seed 0 + stream index);
+    # streams register under the (smoke-shrunk) config name
+    sched, _ = ws.scheduler(streams=[wls[a] for a in ARCHS], seed=0)
+    names = {arch: wls[arch].cfg.name for arch in ARCHS}
+    for arch in ARCHS:
         for p in prompts[arch]:
-            sched.submit(arch, p, max_new)
+            sched.submit(names[arch], p, max_new)
     t0 = time.time()
     outs = sched.run()
     multi_wall = time.time() - t0
-    multi_rows = {arch: _stream_row(arch, sched.streams[arch], outs[arch],
-                                    multi_wall) for arch in ARCHS}
+    multi_rows = {arch: _stream_row(arch, sched.streams[names[arch]],
+                                    outs[names[arch]], multi_wall)
+                  for arch in ARCHS}
 
     result = {
         "archs": list(ARCHS), "block_k": BLOCK_K, "n_slots": N_SLOTS,

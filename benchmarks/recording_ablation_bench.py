@@ -1,14 +1,16 @@
 """Record-time ablation (paper Fig. 7 / Table 1): the distributed
 recording session under emulated networks, with the three optimization
 passes stacked naive -> +deferral -> +speculation -> +metasync
-(-> BENCH_recording.json).
+(-> BENCH_recording.json), driven through ``repro.api``.
 
-One REAL cloud dryrun (cody-mnist smoke prefill through the JAX
-lower/compile stack) is amortized across all pass stacks — serialized
-executables are not byte-deterministic across recompiles, so sharing the
-artifact is what makes the session-produced recordings comparable to the
-legacy local record path at all.  Each stack then runs the full two-party
-device<->cloud protocol over the emulated link.
+One REAL cloud dryrun (``Workload.compile``: cody-mnist smoke prefill
+through the JAX lower/compile stack) is amortized across all pass stacks
+— serialized executables are not byte-deterministic across recompiles,
+so sharing the artifact (``Workload.record(artifact=...)``) is what
+makes the session-produced recordings comparable to the legacy local
+record path at all.  Each stack then runs the full two-party
+device<->cloud protocol over the emulated link; the per-stack session
+report is read off the manifest the session annotated.
 
 Acceptance (asserted into the JSON):
   * virtual record time strictly decreases down the pass stack on wifi;
@@ -22,20 +24,14 @@ from __future__ import annotations
 
 import json
 
-from repro.configs import get_config, smoke_shrink
-from repro.core.attest import fingerprint
+from repro.api import Workspace
 from repro.core.netem import CELLULAR, WIFI
-from repro.core.recorder import compile_artifact, mesh_descriptor
 from repro.core.recording import Recording
-from repro.launch.mesh import make_host_mesh
-from repro.launch.record import build_step, static_meta_for
-from repro.record import CloudDryrun, RecordingSession
-from repro.registry import key_for
-from repro.sharding import rules_for
 
 KEY = b"recording-ablation-key"
 JOBS = 32          # pinned GPU job count: the ablation must not drift with
                    # executable size across jax versions
+SHAPES = dict(cache_len=64, block_k=4, batch=1, prefill_batch=1, seq=16)
 
 STACKS = [
     ("naive", ()),
@@ -45,33 +41,19 @@ STACKS = [
 ]
 
 
-def _dryrun_once():
+def _dryrun_once() -> Recording:
     """The one real compile every session variant replays over the wire."""
-    cfg = smoke_shrink(get_config("cody-mnist"))
-    mesh = make_host_mesh(model=1)
-    rules = rules_for("serve", mesh.axis_names)
-    static = static_meta_for("prefill", cache_len=64, block_k=4, batch=1,
-                             seq=16)
-    fn, specs, donate = build_step(cfg, "prefill", rules, cache_len=64,
-                                   block_k=4, batch=1, seq=16)
-    reg_key = key_for(cfg.name, "prefill",
-                      {**static, "config_fp": cfg.fingerprint()},
-                      fingerprint(mesh_descriptor(mesh)))
-    rec = compile_artifact(reg_key, fn, specs, mesh=mesh,
-                           donate_argnums=donate,
-                           config_fingerprint=cfg.fingerprint(),
-                           static_meta=static)
-    return rec
+    ws = Workspace(key=KEY)
+    return ws.workload("cody-mnist", **SHAPES).compile("prefill")
 
 
 def run_profile(profile, base: Recording) -> list:
+    ws = Workspace(key=KEY, net=profile.name)
+    wl = ws.workload("cody-mnist", **SHAPES)
     rows = []
     for label, passes in STACKS:
-        session = RecordingSession.for_profile(profile, passes=passes,
-                                               cloud=CloudDryrun(jobs=JOBS))
-        rec = session.finalize(
-            Recording(dict(base.manifest), base.payload, base.trees))
-        rep = session.report()
+        rec = wl.record("prefill", passes=passes, artifact=base, jobs=JOBS)
+        rep = rec.manifest["record_session"]
         spec = rep["per_pass"].get("speculation", {})
         sync_layer = "metasync" if "metasync" in rep["per_pass"] else "wire"
         rows.append({

@@ -1,5 +1,5 @@
 """Registry benchmark: cold record vs warm hit vs delta re-record over
-emulated networks (-> BENCH_registry.json).
+emulated networks (-> BENCH_registry.json), driven through ``repro.api``.
 
 Models the CODY fleet economics: the first client to request a key pays
 the cloud dryrun (record) plus the full chunked download; every later
@@ -16,42 +16,26 @@ from __future__ import annotations
 
 import json
 
-from repro.configs import get_config, smoke_shrink
-from repro.core.attest import fingerprint
-from repro.core.netem import CELLULAR, WIFI, NetworkEmulator
-from repro.core.recorder import mesh_descriptor, record
+from repro.api import Workspace
+from repro.core.netem import CELLULAR, WIFI
 from repro.core.recording import Recording
-from repro.launch.mesh import make_host_mesh
-from repro.launch.record import build_step, static_meta_for
-from repro.record import RecordingSession
-from repro.registry import (RecordingStore, RegistryClient, RegistryService,
-                            key_for)
-from repro.sharding import rules_for
 
 KEY = b"registry-bench-key"
+SHAPES = dict(cache_len=64, block_k=4, batch=1, prefill_batch=1, seq=16)
 
 
 def _record_once():
     """One real recording (cody-mnist smoke prefill) shared by every
-    scenario — made through a DISTRIBUTED wifi recording session (all
-    passes on), so its manifest carries the realistic record cost (compile
-    wall time + session virtual time) that cold fetches bill into virtual
-    time.  The bench READS that recorded cost; it never recomputes it."""
-    cfg = smoke_shrink(get_config("cody-mnist"))
-    mesh = make_host_mesh(model=1)
-    rules = rules_for("serve", mesh.axis_names)
-    static = static_meta_for("prefill", cache_len=64, block_k=4, batch=1,
-                             seq=16)
-    fn, specs, donate = build_step(cfg, "prefill", rules, cache_len=64,
-                                   block_k=4, batch=1, seq=16)
-    reg_key = key_for(cfg.name, "prefill",
-                      {**static, "config_fp": cfg.fingerprint()},
-                      fingerprint(mesh_descriptor(mesh)))
-    rec = record(reg_key, fn, specs, mesh=mesh, donate_argnums=donate,
-                 config_fingerprint=cfg.fingerprint(), static_meta=static,
-                 session=RecordingSession.for_profile(WIFI))
+    scenario — made through the API's DISTRIBUTED wifi recording session
+    (all passes on), so its manifest carries the realistic record cost
+    (compile wall time + session virtual time) that cold fetches bill
+    into virtual time.  The bench READS that recorded cost; it never
+    recomputes it."""
+    ws = Workspace(key=KEY, net="wifi")
+    wl = ws.workload("cody-mnist", **SHAPES)
+    rec = wl.record("prefill")
     rec.sign_with(KEY)
-    return reg_key, rec
+    return wl.key("prefill"), rec
 
 
 def _tweaked(rec: Recording) -> Recording:
@@ -63,13 +47,13 @@ def _tweaked(rec: Recording) -> Recording:
 
 
 def run_profile(profile, reg_key: str, rec: Recording) -> list:
-    store = RecordingStore(None, key=KEY)
-    service = RegistryService(store, signing_key=KEY)
+    ws = Workspace(registry=":memory:", key=KEY, net=profile.name)
+    service = ws.service
     rows = []
 
     # --- cold: miss -> single-flight record -> publish -> full download --
-    net = NetworkEmulator(profile)
-    cold_client = RegistryClient(service, netem=net, key=KEY)
+    net = ws.fresh_netem()
+    cold_client = ws.new_client(netem=net)
     record_calls = []
     blob = cold_client.fetch(
         reg_key, record_fn=lambda: record_calls.append(1) or rec)
@@ -81,8 +65,8 @@ def run_profile(profile, reg_key: str, rec: Recording) -> list:
                  "bytes_received": net.bytes_received})
 
     # --- warm: new device, same registry — download only -----------------
-    net = NetworkEmulator(profile)
-    warm_client = RegistryClient(service, netem=net, key=KEY)
+    net = ws.fresh_netem()
+    warm_client = ws.new_client(netem=net)
     warm_blob = warm_client.fetch(reg_key)
     assert warm_blob == blob
     rows.append({"scenario": "warm_hit", "net": profile.name,
@@ -95,7 +79,7 @@ def run_profile(profile, reg_key: str, rec: Recording) -> list:
     # --- delta re-record: config tweak, warm client refetches ------------
     full_stats = service.publish(reg_key + "/fullbase", rec)  # full baseline
     delta_stats = service.publish(reg_key, _tweaked(rec))
-    net = NetworkEmulator(profile)
+    net = ws.fresh_netem()
     warm_client._net = net
     warm_client.fetch(reg_key)       # holds v1 chunks: pulls the delta only
     rows.append({"scenario": "delta_rerecord", "net": profile.name,

@@ -1,4 +1,7 @@
-"""Quickstart: train a small LM end-to-end with checkpoints, then resume.
+"""Quickstart: the paper's whole lifecycle through ``repro.api`` —
+record once in the trusted cloud role (distributed recording session
+over emulated wifi), publish into the content-addressed registry, then
+boot a TEE replica that serves from verified recordings only.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,16 +11,19 @@ import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.launch.train import main as train
-
+from repro.api import Workspace
 
 if __name__ == "__main__":
-    with tempfile.TemporaryDirectory() as ckpt:
-        print("=== phase 1: train 40 steps with async checkpoints ===")
-        train(["--arch", "qwen2.5-3b", "--steps", "40", "--batch", "8",
-               "--seq", "64", "--lr", "3e-3", "--ckpt-dir", ckpt,
-               "--ckpt-every", "20", "--log-every", "10"])
-        print("\n=== phase 2: crash-resume from the checkpoint, 20 more ===")
-        train(["--arch", "qwen2.5-3b", "--steps", "60", "--batch", "8",
-               "--seq", "64", "--lr", "3e-3", "--ckpt-dir", ckpt,
-               "--resume", "--log-every", "10"])
+    with tempfile.TemporaryDirectory() as root:
+        ws = Workspace(registry=root, key=b"quickstart-key", net="wifi")
+        wl = ws.workload("cody-mnist", cache_len=64, block_k=4, batch=2,
+                         seq=16)
+        for kind in ("prefill", "decode"):      # cloud role: record + publish
+            pub = wl.publish(wl.record(kind))
+            print(f"published {pub['key']} v{pub['version']} "
+                  f"({pub['wire_bytes']/1e3:.1f} kB wire)")
+        eng = wl.engine()     # TEE role: fetch-verified, warmed ReplayChannel
+        for prompt in ([7] * 16, [11] * 16):
+            eng.submit(prompt, max_new=6)
+        print("served from verified recordings:", eng.run())
+        print("link accounting:", ws.report()["net"])

@@ -1,12 +1,11 @@
-"""The paper's end-to-end story (CODY):
+"""The paper's end-to-end story (CODY) through ``repro.api`` only:
 
-  1. CLOUD ROLE — dryrun the workload once: lower + compile + serialize the
-     execution plan into a SIGNED recording.  No model weights or user data
-     are needed (abstract ShapeDtypeStructs only — §5 'metastate only').
-  2. TEE ROLE  — the replayer verifies the signature + hardware fingerprint
-     and executes the recording on REAL private inputs.  No model code, no
-     framework, no compiler in the TCB.
-  3. An adversary tampers with the recording -> the replayer rejects it.
+  1. CLOUD — record the workload once (no weights or user data needed:
+     abstract shapes only) and publish the SIGNED recordings.
+  2. TEE   — the engine boots from the registry: chunked fetch, HMAC
+     verified BEFORE any unpickle, no model code / compiler in the TCB —
+     and serves a private prompt BIT-EXACTLY vs live execution.
+  3. An adversary tampers with the fetched recording -> rejected.
 
     PYTHONPATH=src python examples/secure_inference.py
 """
@@ -16,60 +15,34 @@ import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
+from repro.api import Workspace
+from repro.core import Recording, TamperedRecordingError
 
-from repro.configs import get_config, smoke_shrink
-from repro.core.attest import TamperedRecordingError
-from repro.core.replay import Replayer
-from repro.launch.record import main as record_main
-from repro.models import model as M
-
-CLOUD_SIGNING_KEY = b"cloud-hsm-key"
-
-
-def main():
-    arch = "qwen2.5-3b"
-    cfg = smoke_shrink(get_config(arch))
-    with tempfile.TemporaryDirectory() as d:
-        print("=== 1. cloud dryrun service: record prefill + fused decode ===")
-        record_main(["--arch", arch, "--out", d, "--key",
-                     CLOUD_SIGNING_KEY.decode(), "--cache-len", "96",
-                     "--block-k", "8", "--batch", "1", "--seq", "16"])
-
-        print("\n=== 2. client TEE: verify + replay on private data ===")
-        tee = Replayer(key=CLOUD_SIGNING_KEY)
-        pre = tee.load(os.path.join(d, f"{arch}_prefill.codyrec"))
-        dec = tee.load(os.path.join(d, f"{arch}_decode.codyrec"))
-        print(f"  loaded recordings; manifest topology "
-              f"{tee.manifest(pre)['topology'][:12]}... verified")
-
-        params = M.init_params(cfg, jax.random.PRNGKey(42))  # private weights
-        secret_prompt = jnp.array([[11, 22, 33, 44, 55, 66, 77, 88,
-                                    99, 111, 122, 133, 144, 155, 166, 177]],
-                                  jnp.int32)                 # private input
-        out, caches = tee.execute(pre, params, {"tokens": secret_prompt})
-        toks = [int(out["next_tokens"][0])]
-        pos = jnp.array([16], jnp.int32)
-        for _ in range(3):
-            blk, caches = tee.execute(dec, params, out["next_tokens"],
-                                      pos, caches)
-            toks += [int(t) for t in blk["tokens"][0]]
-            pos = blk["pos"]
-        print(f"  generated (privately): {toks}")
-        print(f"  replayer stats: {tee.stats}")
-
-        print("\n=== 3. adversary tampers with the recording ===")
-        p = os.path.join(d, f"{arch}_decode.codyrec")
-        blob = bytearray(open(p, "rb").read())
-        blob[len(blob) // 2] ^= 0xFF
-        open(p, "wb").write(bytes(blob))
-        try:
-            Replayer(key=CLOUD_SIGNING_KEY).load(p)
-            print("  !!! tampering NOT detected")
-        except TamperedRecordingError as e:
-            print(f"  tampering rejected by the TEE: {e}")
-
+KEY = b"cloud-hsm-key"
+SHAPES = dict(cache_len=64, block_k=4, batch=1, seq=16)
+SECRET_PROMPT = [11, 22, 33, 44, 55, 66, 77, 88,
+                 99, 111, 122, 133, 144, 155, 166, 177]
 
 if __name__ == "__main__":
-    main()
+    with tempfile.TemporaryDirectory() as root:
+        ws = Workspace(registry=root, key=KEY, net="wifi")
+        wl = ws.workload("qwen2.5-3b", **SHAPES)
+        print("=== 1. cloud: record + publish (session over wifi) ===")
+        for kind in ("prefill", "decode"):
+            wl.publish(wl.record(kind))
+        print("=== 2. TEE: fetch-verified replay on private data ===")
+        tee = wl.engine(seed=42)        # weights stay private in the TEE
+        tee.submit(SECRET_PROMPT, max_new=8)
+        private = tee.run()
+        live = Workspace().workload("qwen2.5-3b", **SHAPES).engine(seed=42)
+        live.submit(SECRET_PROMPT, max_new=8)
+        assert live.run() == private, "replay diverged from live execution"
+        print(f"generated (privately, bit-exact vs live): {private[0]}")
+        print("=== 3. adversary tampers with the recording ===")
+        blob = bytearray(wl.fetch("decode"))
+        blob[len(blob) // 2] ^= 0xFF
+        try:
+            Recording.from_bytes(bytes(blob), KEY)
+            print("!!! tampering NOT detected")
+        except TamperedRecordingError as e:
+            print(f"tampering rejected by the TEE: {e}")

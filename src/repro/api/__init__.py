@@ -1,0 +1,48 @@
+"""repro.api — the one public way to drive the CODY lifecycle.
+
+The paper's pitch is a clean lifecycle: record CPU/GPU interactions once
+in a trustworthy environment, then replay them inside the TEE.  This
+package is that lifecycle as a fluent, typed API; everything else
+(``repro.launch.*`` CLIs, the benchmarks) is argument parsing over it.
+
+    from repro.api import Workspace
+
+    ws = Workspace(registry="/tmp/reg", key=b"secret", net="wifi")
+    wl = ws.workload("qwen2.5-3b", cache_len=128, block_k=8, batch=4)
+
+    rec = wl.record("prefill")       # distributed RecordingSession (cloud)
+    wl.publish(rec)                  # sign + delta-publish into the registry
+    blob = wl.fetch("prefill")       # chunked fetch, verify-before-unpickle
+    eng = wl.engine()                # TEE serve: warmed ReplayChannel
+    sched, _ = ws.scheduler(["qwen2.5-3b", "xlstm-350m"])   # multi-tenant
+    ws.report()                      # netem + registry + session accounting
+
+Module map:
+
+    workspace.py  Workspace — owns the store/service/client, the emulated
+                  link (``repro.core.PROFILES``), the signing key, and
+                  default record passes; builds workloads, sessions, and
+                  multi-tenant schedulers; aggregates accounting.
+    workload.py   Workload — one (arch, shapes, mesh): derives the
+                  canonical registry key once (``registry.key_for``) and
+                  exposes compile/record/publish/fetch/channel/engine;
+                  plus the shared step-building helpers (``build_step``,
+                  ``static_meta_for``, ``recording_name``,
+                  ``stream_kwargs``) the CLIs re-export.
+
+Trust boundaries: ``record``/``compile`` run in the cloud role (model
+code + compiler in the TCB); ``publish`` signs what crosses into the
+registry; ``fetch`` verifies the HMAC before any ``pickle.loads``;
+``channel``/``engine`` in registry mode execute ONLY verified
+recordings — no model code, no compiler in the TEE.
+"""
+from repro.api.workload import (KINDS, Workload, build_step,
+                                format_session_report, recording_name,
+                                static_meta_for, stream_kwargs)
+from repro.api.workspace import Workspace
+
+__all__ = [
+    "KINDS", "Workload", "Workspace", "build_step",
+    "format_session_report", "recording_name", "static_meta_for",
+    "stream_kwargs",
+]

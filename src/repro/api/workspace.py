@@ -1,0 +1,197 @@
+"""Workspace — the one place the store/service/client/netem/signing-key
+wiring lives.
+
+A ``Workspace`` owns everything a lifecycle needs that is NOT specific
+to one workload: the registry (content-addressed store + single-flight
+record-on-miss service + verify-before-unpickle client), the emulated
+device<->cloud link, the signing key, and the default record-session
+pass stack.  ``workload()`` binds a model/shape tuple to it;
+``scheduler()`` serves several workloads concurrently; ``report()``
+aggregates link, registry, and record-session accounting.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+from repro.configs import get_config, smoke_shrink
+from repro.core.netem import PROFILES, NetProfile, NetworkEmulator
+from repro.record import CloudDryrun, RecordingSession
+from repro.registry import RecordingStore, RegistryClient, RegistryService
+from repro.serving.scheduler import Scheduler
+
+from repro.api.workload import Workload
+
+_Net = Union[None, str, NetProfile, NetworkEmulator]
+
+
+def _resolve_net(net: _Net) -> Optional[NetworkEmulator]:
+    """``net`` can be a profile name from ``repro.core.PROFILES``
+    ("local"/"wifi"/"cellular", or "none"), a ``NetProfile``, an existing
+    ``NetworkEmulator`` (shared billing with a caller), or None."""
+    if net is None or net == "none":
+        return None
+    if isinstance(net, NetworkEmulator):
+        return net
+    if isinstance(net, NetProfile):
+        return NetworkEmulator(net)
+    if net not in PROFILES:
+        raise ValueError(f"unknown net profile {net!r}; "
+                         f"valid: none|{'|'.join(sorted(PROFILES))}")
+    return NetworkEmulator(PROFILES[net])
+
+
+class Workspace:
+    """``Workspace(registry=..., key=..., net="wifi")`` — the lifecycle
+    root.  ``registry`` is a filesystem root, ``":memory:"`` for an
+    in-process store, or None for live-only serving; ``key`` signs and
+    verifies every recording that crosses the registry boundary."""
+
+    def __init__(self, registry: Union[None, str, bool] = None, *,
+                 key: bytes = b"", net: _Net = None,
+                 record_passes="all"):
+        if registry is False or registry == "":
+            registry = None       # falsy spellings of "no registry"
+        if registry is not None and not key:
+            raise ValueError(
+                "Workspace with a registry requires the signing key: "
+                "recordings are verified before any unpickle, so an "
+                "unkeyed registry workspace could never fetch safely")
+        self.key = key
+        self.registry = registry
+        self.netem = _resolve_net(net)
+        self.record_passes = record_passes
+        self.workloads = []
+        self._store: Optional[RecordingStore] = None
+        self._service: Optional[RegistryService] = None
+        self._client: Optional[RegistryClient] = None
+
+    # ------------------------------------------------------------- wiring --
+    @property
+    def has_registry(self) -> bool:
+        return self.registry is not None
+
+    @property
+    def profile(self) -> Optional[NetProfile]:
+        return self.netem.profile if self.netem is not None else None
+
+    def fresh_netem(self) -> Optional[NetworkEmulator]:
+        """A new emulator on the workspace's profile — for callers that
+        need an isolated billing span (e.g. per-scenario benchmarks)."""
+        return NetworkEmulator(self.profile) if self.netem is not None \
+            else None
+
+    @property
+    def store(self) -> RecordingStore:
+        if not self.has_registry:
+            raise RuntimeError("Workspace has no registry configured; "
+                               "pass registry=<root> (or ':memory:')")
+        if self._store is None:
+            root = None if self.registry in (True, ":memory:") \
+                else self.registry
+            self._store = RecordingStore(root, key=self.key)
+        return self._store
+
+    @property
+    def service(self) -> RegistryService:
+        """Cloud side: fetch-by-key + single-flight record-on-miss over
+        the workspace link profile + delta publishing."""
+        if self._service is None:
+            self._service = RegistryService(
+                self.store, signing_key=self.key,
+                record_profile=self.profile,
+                record_passes=self.record_passes)
+        return self._service
+
+    @property
+    def client(self) -> RegistryClient:
+        """Device side: chunked resumable netem-billed fetch,
+        HMAC-verify-before-unpickle."""
+        if self._client is None:
+            self._client = self.new_client()
+        return self._client
+
+    @property
+    def registry_client(self) -> Optional[RegistryClient]:
+        """The shared client if one has been created, else None — for
+        callers that only want to read its stats."""
+        return self._client
+
+    def new_client(self, netem: Optional[NetworkEmulator] = None
+                   ) -> RegistryClient:
+        """A fresh client against this workspace's service (its own
+        fetch cache; optionally its own emulator)."""
+        return RegistryClient(self.service,
+                              netem=netem if netem is not None
+                              else self.netem, key=self.key)
+
+    # ------------------------------------------------------------- record --
+    def session(self, passes=None, jobs: Optional[int] = None
+                ) -> RecordingSession:
+        """One two-party recording session over the workspace's link
+        profile (in-process degenerate when the workspace has no net).
+        Sessions are single-use: one per recording."""
+        passes = self.record_passes if passes is None else passes
+        cloud = CloudDryrun(jobs=jobs) if jobs is not None else None
+        if self.netem is not None:
+            return RecordingSession.for_profile(self.profile, passes=passes,
+                                                cloud=cloud)
+        return RecordingSession.local(passes=passes, cloud=cloud)
+
+    # ---------------------------------------------------------- workloads --
+    def workload(self, arch, *, shapes: Optional[dict] = None, mesh=None,
+                 smoke: bool = True, **shape_overrides) -> Workload:
+        """Bind a model to this workspace.  ``arch`` is a config name
+        (smoke-shrunk by default) or an already-built ``ModelConfig``;
+        shape kwargs (``cache_len``, ``block_k``, ``batch``,
+        ``prefill_batch``, ``seq``, ``eos_id``) come from ``shapes`` or
+        directly as keyword overrides."""
+        cfg = arch
+        if isinstance(arch, str):
+            cfg = get_config(arch)
+            if smoke:
+                cfg = smoke_shrink(cfg)
+        kw = dict(shapes or {})
+        kw.update(shape_overrides)
+        wl = Workload(self, cfg, mesh=mesh, **kw)
+        self.workloads.append(wl)
+        return wl
+
+    def scheduler(self, streams, *, n_slots: int = 4, cache_len: int = 128,
+                  block_k: int = 8, eos_id: int = 2, smoke: bool = True,
+                  speculate: bool = True, pipeline_depth: int = 4,
+                  max_live_slots=None, stall_limit=None, seed: int = 0):
+        """Multi-tenant serving: one ``Scheduler``, one stream per entry
+        of ``streams``, each with its own channel, params (seeded
+        ``seed + i``), slots, and caches.  An entry is an arch name —
+        shaped by the ``n_slots``/``cache_len``/``block_k``/``eos_id``/
+        ``smoke`` kwargs — or a prepared ``Workload``, which KEEPS its
+        own shapes (it is already an identity; the kwargs do not apply).
+        Returns ``(scheduler, {name: workload})``."""
+        sched = Scheduler(netem=self.netem, max_live_slots=max_live_slots,
+                          stall_limit=stall_limit)
+        out = {}
+        for i, s in enumerate(streams):
+            wl = s if isinstance(s, Workload) else self.workload(
+                s, smoke=smoke, batch=n_slots, cache_len=cache_len,
+                block_k=block_k, eos_id=eos_id)
+            sched.add_stream(wl.cfg.name, wl.channel(), wl.params(seed + i),
+                             **wl.stream_kwargs(speculate=speculate,
+                                                pipeline_depth=pipeline_depth))
+            out[wl.cfg.name] = wl
+        return sched, out
+
+    # ----------------------------------------------------------- reporting --
+    def report(self) -> dict:
+        """Aggregate accounting: the link emulator's totals, registry
+        client/service stats, and every record-session report made
+        through this workspace's workloads."""
+        return {
+            "net": self.netem.snapshot() if self.netem is not None else None,
+            "registry_client": dict(self._client.stats)
+            if self._client is not None else {},
+            "registry_service": dict(self._service.stats)
+            if self._service is not None else {},
+            "sessions": [dict(rep, workload=wl.cfg.name, kind=kind)
+                         for wl in self.workloads
+                         for kind, rep in wl.sessions],
+        }

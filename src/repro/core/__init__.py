@@ -11,7 +11,8 @@ from repro.core.deferral import (CommitQueue, Op, Symbol,
                                  SymbolReResolutionError,
                                  UnresolvedSymbolError)
 from repro.core.metasync import DeltaSync, full_pack, is_metastate, merge, split
-from repro.core.netem import CELLULAR, LOCAL, WIFI, NetProfile, NetworkEmulator
+from repro.core.netem import (CELLULAR, LOCAL, PROFILES, WIFI, NetProfile,
+                              NetworkEmulator)
 from repro.core.recording import Recording
 from repro.core.speculation import (HistorySpeculator, MispredictError,
                                     SpeculativeRunner)
@@ -22,7 +23,8 @@ __all__ = [
     "LiveChannel", "ReplayChannel", "NetemBilledChannel",
     "ChannelCapabilityError", "HistorySpeculator", "MispredictError",
     "SpeculativeRunner", "DeltaSync", "full_pack", "is_metastate", "merge",
-    "split", "NetworkEmulator", "NetProfile", "WIFI", "CELLULAR", "LOCAL",
+    "split", "NetworkEmulator", "NetProfile", "PROFILES", "WIFI", "CELLULAR",
+    "LOCAL",
     "fingerprint", "sign", "verify", "TamperedRecordingError",
     "TopologyMismatchError", "UnverifiedRecordingError",
 ]

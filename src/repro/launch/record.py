@@ -1,5 +1,4 @@
-"""The CODY "cloud dryrun service" CLI: produce signed recordings and
-publish them into the recording registry.
+"""The CODY "cloud dryrun service" CLI — a thin shim over ``repro.api``.
 
     python -m repro.launch.record --arch qwen2.5-3b --smoke \
         --kinds prefill,decode --out /tmp/recordings --key secret \
@@ -7,83 +6,29 @@ publish them into the recording registry.
 
 Each record runs as a distributed ``RecordingSession`` (device proxy +
 cloud dryrun over the ``--net`` emulated link) with the paper's record
-optimizations selected by ``--passes`` (any of deferral, speculation,
-metasync; "all"/"none"), and prints the session report: virtual record
-time, blocking/async round trips, wire bytes, per-pass accounting.
-
-Recordings are identified by ``registry.key_for(arch, kind, shapes,
-mesh_fp)`` — the same key the serve CLI fetches by and the replayer
-caches executables under.  Each recording is written both as a flat
+optimizations selected by ``--passes``, and prints the session report:
+virtual record time, blocking/async round trips, wire bytes, per-pass
+accounting.  Recordings are identified by ``registry.key_for`` — the
+same key the serve CLI fetches by — and written both as a flat
 ``.codyrec`` file (legacy/offline path) and into the content-addressed
-registry at ``--registry`` (delta-published: a re-record after a config
-tweak ships only changed chunks).
+registry at ``--registry`` (delta-published).
+
+This module is CLI-only: all lifecycle logic lives in ``repro.api``
+(``Workspace``/``Workload``); ``build_step`` / ``static_meta_for`` /
+``recording_name`` / ``format_session_report`` are re-exported here for
+backward compatibility.
 """
 from __future__ import annotations
 
 import argparse
 import os
 
-import jax
-import jax.numpy as jnp
+from repro.api import (Workspace, build_step, format_session_report,
+                       recording_name, static_meta_for)
+from repro.core import PROFILES
 
-from repro.configs import get_config, smoke_shrink
-from repro.core.attest import fingerprint
-from repro.core.netem import PROFILES
-from repro.core.recorder import mesh_descriptor, record
-from repro.launch.mesh import make_host_mesh
-from repro.models import model as M
-from repro.record import RecordingSession, resolve_passes
-from repro.registry import RecordingStore, RegistryService, key_arch, key_for
-from repro.sharding import rules_for
-from repro.training import steps as ST
-
-
-def format_session_report(rep: dict) -> str:
-    """One-line summary of a RecordingSession report for CLI output."""
-    mb = (rep["bytes_sent"] + rep["bytes_received"]) / 1e6
-    passes = "+".join(rep["passes"]) or "naive"
-    return (f"session[{rep['net']}|{passes}]: "
-            f"{rep['virtual_time_s']:.2f}s virtual, "
-            f"{rep['blocking_round_trips']} blocking / "
-            f"{rep['async_round_trips']} async RTs, {mb:.2f} MB, "
-            f"{rep['jobs']} jobs")
-
-
-def recording_name(arch: str, kind: str, extra: str = "") -> str:
-    """Flat on-disk filename for a recording (identity normalization is
-    shared with the registry via ``key_arch``)."""
-    return f"{key_arch(arch)}_{kind}{('_' + extra) if extra else ''}.codyrec"
-
-
-def build_step(cfg, kind: str, rules, *, cache_len: int, block_k: int = 8,
-               batch: int = 1, seq: int = 32):
-    params = M.abstract_params(cfg)
-    if kind == "prefill":
-        fn = ST.make_prefill_step(cfg, rules, cache_len=cache_len)
-        batch_spec = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
-        return fn, (params, batch_spec), ()
-    if kind == "decode":
-        fn = ST.make_fused_decode_step(cfg, rules, k=block_k)
-        caches = jax.eval_shape(lambda: M.init_cache(cfg, batch, cache_len))
-        toks = jax.ShapeDtypeStruct((batch,), jnp.int32)
-        pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
-        return fn, (params, toks, pos, caches), (3,)
-    raise ValueError(kind)
-
-
-def static_meta_for(kind: str, *, cache_len: int, block_k: int, batch: int,
-                    seq: int) -> dict:
-    """The shape/static description that parameterizes ``build_step`` —
-    also the ``shapes`` component of the registry key, so record and
-    serve derive identical keys from identical CLI arguments.  ``seq``
-    only shapes prefill (decode steps one token per slot per iteration),
-    so it is excluded from decode identity: a decode recording serves any
-    prompt length."""
-    static = {"kind": kind, "cache_len": cache_len, "block_k": block_k,
-              "batch": batch}
-    if kind == "prefill":
-        static["seq"] = seq
-    return static
+__all__ = ["build_step", "static_meta_for", "recording_name",
+           "format_session_report", "main"]
 
 
 def main(argv=None):
@@ -115,54 +60,32 @@ def main(argv=None):
                          "(deferral,speculation,metasync) | all | none")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = smoke_shrink(cfg)
-    os.makedirs(args.out, exist_ok=True)
-    signing_key = args.key.encode()
-    service = None
+    registry = None
     if not args.no_registry:
-        registry_root = args.registry or os.path.join(args.out, "registry")
-        store = RecordingStore(registry_root, key=signing_key)
-        service = RegistryService(store, signing_key=signing_key)
-    mesh = make_host_mesh(model=1)
-    mesh_fp = fingerprint(mesh_descriptor(mesh))
-    rules = rules_for("serve", mesh.axis_names)
+        registry = args.registry or os.path.join(args.out, "registry")
+    ws = Workspace(registry=registry, key=args.key.encode(), net=args.net,
+                   record_passes=args.passes)
+    wl = ws.workload(args.arch, smoke=args.smoke, cache_len=args.cache_len,
+                     block_k=args.block_k, batch=args.batch,
+                     prefill_batch=args.prefill_batch, seq=args.seq)
+    os.makedirs(args.out, exist_ok=True)
     for kind in args.kinds.split(","):
-        # --batch sizes the decode step (the serving slot count); prefill
-        # defaults to batch=1, the engine's per-request admission shape
-        batch = args.prefill_batch if kind == "prefill" else args.batch
-        static = static_meta_for(kind, cache_len=args.cache_len,
-                                 block_k=args.block_k, batch=batch,
-                                 seq=args.seq)
-        fn, specs, donate = build_step(
-            cfg, kind, rules, cache_len=args.cache_len,
-            block_k=args.block_k, batch=batch, seq=args.seq)
-        # config fingerprint is part of recording identity: two sizes of
-        # one arch (e.g. smoke-shrunk vs full) must never share a key
-        key = key_for(args.arch, kind,
-                      {**static, "config_fp": cfg.fingerprint()}, mesh_fp)
         # one two-party session per recording: fresh device proxy, fresh
         # speculation history, per-recording report
-        session = RecordingSession.for_profile(
-            PROFILES[args.net], passes=resolve_passes(args.passes))
-        rec = record(key, fn, specs, mesh=mesh,
-                     donate_argnums=donate,
-                     config_fingerprint=cfg.fingerprint(),
-                     static_meta=static, session=session)
+        rec = wl.record(kind)
         path = os.path.join(args.out, recording_name(args.arch, kind))
-        rec.save(path, signing_key)
+        rec.save(path, ws.key)
         line = (f"recorded {kind}: {path} "
                 f"({len(rec.payload)/1e3:.1f} kB executable, "
                 f"{rec.manifest['record_wall_s']:.1f}s record time)")
-        if service is not None:
-            pub = service.publish(key, rec)
-            line += (f"; published {key} v{pub['version']} "
+        if registry is not None:
+            pub = wl.publish(rec)
+            line += (f"; published {pub['key']} v{pub['version']} "
                      f"({pub['wire_bytes']/1e3:.1f} kB wire, "
                      f"{pub['chunks_new']} new / "
                      f"{pub['chunks_reused']} reused chunks)")
         print(line)
-        print("  " + format_session_report(session.report()))
+        print("  " + format_session_report(rec.manifest["record_session"]))
 
 
 if __name__ == "__main__":

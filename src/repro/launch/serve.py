@@ -1,23 +1,26 @@
-"""Serving driver: continuous batching with fused-block decode, speculative
-continuation, and (optionally) execution purely from signed recordings —
-the paper's in-TEE replay mode.  Recordings come from a flat directory
+"""Serving driver CLI — a thin shim over ``repro.api``.
+
+Continuous batching with fused-block decode, speculative continuation,
+and (optionally) execution purely from signed recordings — the paper's
+in-TEE replay mode.  Recordings come from a flat directory
 (``--from-recordings``) or from the content-addressed registry
 (``--from-registry``), the latter with chunked/resumable fetch over an
-emulated network and collaborative record-on-miss.
-
-Execution is transport-agnostic: ``build_channel`` returns the
-``ExecutionChannel`` (live-jit / signed-replay / netem-billed) a stream
-decodes through, ``build_engine`` wires one stream through the layered
-stack behind the classic ``Engine`` facade, and ``build_scheduler``
-serves SEVERAL model families concurrently through one ``Scheduler``
-(e.g. an attention family with speculation next to a recurrent family
-with speculation gated off):
+emulated network and collaborative record-on-miss:
 
     python -m repro.launch.serve --arch qwen2.5-3b --smoke --requests 8
     python -m repro.launch.serve --streams qwen2.5-3b,xlstm-350m --requests 8
     python -m repro.launch.serve --from-recordings /tmp/recordings --key k
     python -m repro.launch.serve --from-registry /tmp/recordings/registry \
         --net wifi --record-on-miss --key k
+
+This module is CLI-only: channel selection, registry boot, record-on-miss
+and multi-tenant wiring all live in ``repro.api``; ``build_channel`` /
+``build_engine`` / ``build_scheduler`` / ``stream_kwargs`` are kept as
+thin compatibility wrappers over ``Workspace``/``Workload``.  One
+deliberate tightening: passing BOTH ``registry_dir`` and
+``recordings_dir`` (previously registry silently won) and a registry
+without a signing key (previously failed later, at client creation) now
+raise ``ValueError`` up front.
 """
 from __future__ import annotations
 
@@ -27,158 +30,44 @@ import time
 import jax
 import numpy as np
 
+from repro.api import Workspace, stream_kwargs
 from repro.configs import get_config, smoke_shrink
-from repro.core.channel import LiveChannel, NetemBilledChannel
-from repro.launch.mesh import make_host_mesh
+from repro.core import PROFILES, NetworkEmulator
 from repro.models import model as M
-from repro.serving.engine import Engine, cache_batch_axes_for
-from repro.serving.scheduler import Scheduler
-from repro.sharding import rules_for
-from repro.training import steps as ST
+from repro.serving.engine import Engine
+
+__all__ = ["build_channel", "build_engine", "build_scheduler",
+           "stream_kwargs", "main"]
+
+# registry prefill recordings are fetched at this prompt length; the
+# engine adapts admission via channel.fixed_prompt_len
+REC_SEQ = 16
 
 
-def _registry_channel(cfg, mesh, rules, *, registry_dir: str, key: bytes,
-                      n_slots: int, cache_len: int, block_k: int,
-                      netem=None, record_on_miss: bool = False,
-                      rec_seq: int = 16):
-    """Boot a ReplayChannel from the registry: fetch-by-key (chunked,
-    resumable, netem-billed), verify, preload + warm — a replica boots from
-    a registry hit without recompiling.  On miss, ``record_on_miss``
-    records through the service's single-flight lease with THIS engine's
-    exact shapes.  The serving stack receives only the channel."""
-    from repro.core.attest import fingerprint
-    from repro.core.recorder import (mesh_descriptor, record,
-                                     topology_fingerprint)
-    from repro.core.replay import Replayer
-    from repro.launch.record import build_step, static_meta_for
-    from repro.registry import (RegistryClient, RegistryService,
-                                RecordingStore, key_arch, key_for)
-
-    store = RecordingStore(registry_dir, key=key)
-    # record-on-miss runs the CODY two-party session over the same link
-    # profile the client fetches through — cold boots bill realistic
-    # distributed record cost, not just compile wall time
-    service = RegistryService(
-        store, signing_key=key,
-        record_profile=netem.profile if netem is not None else None)
-    client = RegistryClient(service, netem=netem, key=key)
-    mesh_fp = fingerprint(mesh_descriptor(mesh))
-    config_fp = cfg.fingerprint()
-    topo = topology_fingerprint()
-
-    def _usable(fk: str, static: dict) -> bool:
-        """An alternate published shape of this workload is substitutable
-        iff the engine-visible shapes agree (prefill seq may differ: the
-        engine adapts via fixed_prompt_len; decode ignores seq) AND it was
-        recorded for this exact model config and hardware topology — a
-        foreign-host or differently-sized recording would only fail later
-        with TopologyMismatch/ReplayArgumentError."""
-        meta = store.entry(fk)["meta"]
-        static_meta = meta.get("static", {})
-        return (all(static_meta.get(f) == static[f]
-                    for f in ("batch", "cache_len", "block_k"))
-                and meta.get("config_fingerprint", "") == config_fp
-                and meta.get("topology", "") == topo)
-
-    items = []
-    for kind in ("prefill", "decode"):
-        static = static_meta_for(
-            kind, cache_len=cache_len, block_k=block_k,
-            batch=1 if kind == "prefill" else n_slots, seq=rec_seq)
-        reg_key = key_for(cfg.name, kind, {**static, "config_fp": config_fp},
-                          mesh_fp)
-        record_fn = None
-        if not service.has(reg_key):
-            found = [fk for fk in store.find(f"{key_arch(cfg.name)}/{kind}/")
-                     if _usable(fk, static)]
-            if found:
-                # most recently published alternate wins — find() sorts by
-                # key hash, which would make the choice arbitrary
-                reg_key = max(found, key=lambda fk: store.entry(fk)["meta"]
-                              .get("published_s", 0.0))
-            elif record_on_miss:
-                def record_fn(session=None, kind=kind, static=static,
-                              reg_key=reg_key):
-                    # ``session`` is supplied by the service's lease: the
-                    # miss records through a distributed RecordingSession
-                    # over the service's configured profile
-                    fn, specs, donate = build_step(
-                        cfg, kind, rules, cache_len=cache_len,
-                        block_k=block_k, batch=static["batch"],
-                        seq=static.get("seq", rec_seq))
-                    return record(reg_key, fn, specs, mesh=mesh,
-                                  donate_argnums=donate,
-                                  config_fingerprint=cfg.fingerprint(),
-                                  static_meta=static, session=session)
-        items.append((reg_key, record_fn))
-    rp = Replayer(key=key)
-    channel = client.into_channel(rp, items[0], items[1], warm=True)
-    return channel, client
+def _workspace_workload(cfg, *, cache_len, block_k, eos_id, n_slots,
+                        registry_dir, key, netem):
+    ws = Workspace(registry=registry_dir or None, key=key, net=netem)
+    wl = ws.workload(cfg, cache_len=cache_len, block_k=block_k,
+                     batch=n_slots, prefill_batch=1, seq=REC_SEQ,
+                     eos_id=eos_id)
+    return ws, wl
 
 
 def build_channel(cfg, *, cache_len: int, block_k: int, eos_id: int = 2,
                   n_slots: int = 4, recordings_dir: str = "",
                   registry_dir: str = "", record_on_miss: bool = False,
                   key: bytes = b"", netem=None, bill_dispatches: bool = False):
-    """Build the ExecutionChannel for one workload.
-
-    Live-jit by default; signed-replay when ``recordings_dir`` /
-    ``registry_dir`` is given (the paper's in-TEE mode — the channel never
-    imports model code at decode time); wrap with ``bill_dispatches`` for
-    the netem-billed record/emulation transport.  Returns
+    """Build the ExecutionChannel for one workload (live-jit / flat
+    signed-replay / verified registry replay).  Returns
     ``(channel, registry_client_or_None)``."""
-    mesh = make_host_mesh(model=1)
-    rules = rules_for("serve", mesh.axis_names)
-    registry_client = None
-    if registry_dir:
-        channel, registry_client = _registry_channel(
-            cfg, mesh, rules, registry_dir=registry_dir, key=key,
-            n_slots=n_slots, cache_len=cache_len, block_k=block_k,
-            netem=netem, record_on_miss=record_on_miss)
-    elif recordings_dir:
-        from repro.core.channel import ReplayChannel
-        from repro.core.replay import Replayer
-        from repro.launch.record import recording_name
-        rp = Replayer(key=key)
-        pre = rp.load(f"{recordings_dir}/{recording_name(cfg.name, 'prefill')}")
-        dec = rp.load(f"{recordings_dir}/{recording_name(cfg.name, 'decode')}")
-        rp.warm(dec)   # decode joins the async pipeline with no cold start
-        # recorded executables are fixed-shape: prompts must match the
-        # recorded prefill seq (callers read this off the channel)
-        channel = ReplayChannel(rp, pre, dec)
-    else:
-        prefill_fn = jax.jit(ST.make_prefill_step(cfg, rules, cache_len))
-        decode_fn = jax.jit(
-            ST.make_fused_decode_step(cfg, rules, k=block_k, eos_id=eos_id),
-            donate_argnums=(3,))
-        # grouped right-padded admission: attention families only (decode
-        # masks rows >= pos; recurrent state is not position-indexed), and
-        # the SWA ring layout depends on the true length
-        batched_prefill = None
-        if cfg.family in ("dense", "moe") and not cfg.sliding_window:
-            batched_prefill = jax.jit(
-                ST.make_batched_prefill_step(cfg, rules, cache_len))
-        channel = LiveChannel(prefill_fn, decode_fn, batched_prefill)
-    if bill_dispatches:
-        channel = NetemBilledChannel(channel, netem)
-    return channel, registry_client
-
-
-def stream_kwargs(cfg, *, n_slots: int, cache_len: int, block_k: int,
-                  eos_id: int, speculate: bool = True,
-                  pipeline_depth: int = 4) -> dict:
-    """Per-stream policy for ``Scheduler.add_stream`` derived from the
-    model family: recurrent state is not position-indexed, so dropped
-    pipeline tails cannot be re-executed against an already-advanced
-    state — the engine's metastate-only rollback is unsound there and
-    speculation is forced off."""
-    if cfg.family in ("ssm", "hybrid"):
-        speculate = False
-    return dict(n_slots=n_slots, cache_len=cache_len, block_k=block_k,
-                eos_id=eos_id,
-                init_caches_fn=lambda: M.init_cache(cfg, n_slots, cache_len),
-                cache_batch_axes=cache_batch_axes_for(cfg),
-                speculate=speculate, pipeline_depth=pipeline_depth)
+    ws, wl = _workspace_workload(cfg, cache_len=cache_len, block_k=block_k,
+                                 eos_id=eos_id, n_slots=n_slots,
+                                 registry_dir=registry_dir, key=key,
+                                 netem=netem)
+    channel = wl.channel(recordings_dir=recordings_dir,
+                         record_on_miss=record_on_miss,
+                         bill_dispatches=bill_dispatches)
+    return channel, ws.registry_client
 
 
 def build_engine(cfg, *, n_slots: int, cache_len: int, block_k: int,
@@ -187,17 +76,13 @@ def build_engine(cfg, *, n_slots: int, cache_len: int, block_k: int,
                  key: bytes = b"", netem=None, speculate=True,
                  pipeline_depth: int = 4) -> Engine:
     """Single-workload path: one stream behind the classic Engine facade."""
-    channel, registry_client = build_channel(
-        cfg, cache_len=cache_len, block_k=block_k, eos_id=eos_id,
-        n_slots=n_slots, recordings_dir=recordings_dir,
-        registry_dir=registry_dir, record_on_miss=record_on_miss, key=key,
-        netem=netem)
-    kw = stream_kwargs(cfg, n_slots=n_slots, cache_len=cache_len,
-                       block_k=block_k, eos_id=eos_id, speculate=speculate,
-                       pipeline_depth=pipeline_depth)
-    eng = Engine(params, channel=channel, netem=netem, **kw)
-    eng.registry_client = registry_client
-    return eng
+    _ws, wl = _workspace_workload(cfg, cache_len=cache_len, block_k=block_k,
+                                  eos_id=eos_id, n_slots=n_slots,
+                                  registry_dir=registry_dir, key=key,
+                                  netem=netem)
+    return wl.engine(params=params, recordings_dir=recordings_dir,
+                     record_on_miss=record_on_miss, speculate=speculate,
+                     pipeline_depth=pipeline_depth)
 
 
 def build_scheduler(archs, *, n_slots: int, cache_len: int, block_k: int,
@@ -207,24 +92,14 @@ def build_scheduler(archs, *, n_slots: int, cache_len: int, block_k: int,
     """Multi-workload path: one Scheduler, one stream per arch, each with
     its own live-jit channel, params, slots, and caches.  Returns
     ``(scheduler, {name: cfg})``."""
-    sched = Scheduler(netem=netem, max_live_slots=max_live_slots,
-                      stall_limit=stall_limit)
-    cfgs = {}
-    for i, arch in enumerate(archs):
-        cfg = get_config(arch)
-        if smoke:
-            cfg = smoke_shrink(cfg)
-        params = M.init_params(cfg, jax.random.PRNGKey(seed + i))
-        channel, _ = build_channel(cfg, cache_len=cache_len,
-                                   block_k=block_k, eos_id=eos_id,
-                                   n_slots=n_slots, netem=netem)
-        kw = stream_kwargs(cfg, n_slots=n_slots, cache_len=cache_len,
-                           block_k=block_k, eos_id=eos_id,
-                           speculate=speculate,
-                           pipeline_depth=pipeline_depth)
-        sched.add_stream(cfg.name, channel, params, **kw)
-        cfgs[cfg.name] = cfg
-    return sched, cfgs
+    ws = Workspace(net=netem)
+    sched, wls = ws.scheduler(archs, n_slots=n_slots, cache_len=cache_len,
+                              block_k=block_k, eos_id=eos_id, smoke=smoke,
+                              speculate=speculate,
+                              pipeline_depth=pipeline_depth,
+                              max_live_slots=max_live_slots,
+                              stall_limit=stall_limit, seed=seed)
+    return sched, {name: wl.cfg for name, wl in wls.items()}
 
 
 def _serve_multi(args, netem):
@@ -273,7 +148,6 @@ def main(argv=None):
     ap.add_argument("--record-on-miss", action="store_true",
                     help="on registry miss, record through the service's "
                          "single-flight lease")
-    from repro.core.netem import PROFILES
     ap.add_argument("--net", default="none",
                     choices=["none"] + sorted(PROFILES),
                     help="emulated network profile for registry fetches")
@@ -282,7 +156,6 @@ def main(argv=None):
 
     netem = None
     if args.net != "none":
-        from repro.core.netem import NetworkEmulator
         netem = NetworkEmulator(PROFILES[args.net])
 
     if args.streams:
