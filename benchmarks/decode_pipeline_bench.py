@@ -4,8 +4,10 @@ Serves the same workload at pipeline depths {1, 2, 4, 8} and reports
 tokens/s plus HOST-SYNC counts: with the async pipeline the host↔device
 round trips drop from O(1/block_k) per token (one readback per fused
 block) to O(1/(block_k·depth)) (one metastate readback per frontier).
-Results are written to ``BENCH_decode.json`` so CI tracks the perf
-trajectory.
+A second section serves the SAME workload once live-jit and once through
+verified registry replay (record-on-miss, fast-path dispatch) and
+compares tokens/s at unchanged output digests.  Results are written to
+``BENCH_decode.json`` so CI tracks the perf trajectory.
 
     PYTHONPATH=src python -m benchmarks.decode_pipeline_bench [--quick]
 """
@@ -18,6 +20,7 @@ import time
 import jax
 import numpy as np
 
+from repro.api import Workspace
 from repro.configs import get_config, smoke_shrink
 from repro.core.netem import WIFI, NetworkEmulator
 from repro.launch.mesh import make_host_mesh
@@ -83,6 +86,61 @@ def _run_once(cfg, params, fns, depth, *, requests, max_new, speculate=True):
     }
 
 
+def _serve_once(wl, eng, *, requests, max_new, seed=7):
+    """Submit a fixed-length workload and drain — prompt length is pinned
+    to the workload's prefill seq so the same requests serve through a
+    recorded executable (fixed prompt shape) and live jit alike."""
+    rng = np.random.default_rng(seed)
+    prompts = [list(rng.integers(3, wl.cfg.vocab_size, wl.seq))
+               for _ in range(requests)]
+    for p in prompts:
+        eng.submit(p, max_new)
+    t0 = time.time()
+    outs = eng.run()
+    wall_s = time.time() - t0
+    toks = sum(len(v) for v in outs.values())
+    digest = hash(tuple(tuple(v) for _, v in sorted(outs.items()))) \
+        & 0xFFFFFFFF
+    return toks, wall_s, digest
+
+
+def replay_vs_live(quick: bool = False, arch: str = "qwen2.5-3b") -> dict:
+    """Live-jit vs verified-registry-replay tokens/s at identical output
+    digests: one workload shape, fixed-length prompts, the replay side
+    boots record-on-miss and decodes on the Replayer fast path."""
+    shapes = dict(cache_len=CACHE_LEN, block_k=BLOCK_K, batch=N_SLOTS,
+                  prefill_batch=1, seq=8)
+    requests = 4 if quick else 8
+    max_new = 16 if quick else 32
+    rows = {}
+    for mode in ("live", "replay"):
+        ws = Workspace() if mode == "live" else \
+            Workspace(registry=":memory:", key=b"decode-bench-key")
+        wl = ws.workload(arch, **shapes)
+        eng = wl.engine(record_on_miss=(mode == "replay"),
+                        pipeline_depth=2)
+        # warm-up drain compiles/validates every shape, then the timed run
+        _serve_once(wl, eng, requests=requests, max_new=max_new, seed=3)
+        toks, wall_s, digest = _serve_once(wl, eng, requests=requests,
+                                           max_new=max_new)
+        row = {"tokens": toks, "wall_s": round(wall_s, 4),
+               "tokens_per_s": round(toks / wall_s, 1),
+               "outputs_digest": digest}
+        if mode == "replay":
+            stats = ws.report()["replayer_stats"]
+            row["fast_hits"] = int(stats.get("fast_hits", 0))
+            row["slow_validations"] = int(stats.get("slow_validations", 0))
+        rows[mode] = row
+    return {
+        "requests": requests, "max_new": max_new, "seq": shapes["seq"],
+        "live": rows["live"], "replay": rows["replay"],
+        "identical_outputs":
+            rows["live"]["outputs_digest"] == rows["replay"]["outputs_digest"],
+        "replay_to_live_ratio": round(rows["replay"]["tokens_per_s"]
+                                      / rows["live"]["tokens_per_s"], 3),
+    }
+
+
 def main(quick: bool = False, arch: str = "qwen2.5-3b",
          out_json: str = "BENCH_decode.json"):
     cfg = smoke_shrink(get_config(arch))
@@ -98,7 +156,8 @@ def main(quick: bool = False, arch: str = "qwen2.5-3b",
     result = {"arch": cfg.name, "block_k": BLOCK_K, "n_slots": N_SLOTS,
               "requests": requests, "max_new": max_new,
               "identical_streams_across_depths": len(digests) == 1,
-              "depths": rows}
+              "depths": rows,
+              "replay_vs_live": replay_vs_live(quick, arch)}
     with open(out_json, "w") as f:
         json.dump(result, f, indent=2)
     return rows

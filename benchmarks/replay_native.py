@@ -1,30 +1,84 @@
-"""Paper Table 2 reproduction: replay vs native execution delay.
+"""Paper Table 2 reproduction: replay vs native execution delay, plus the
+replay-side interaction-plan ablation (-> BENCH_replay.json).
 
-TPU/JAX analogue of the paper's comparison (replay beats native because
-the full stack is out of the loop):
-  * native   — the full framework path: fresh process semantics modeled as
-               trace+lower+compile+execute (what the GPU stack's JIT and
-               runtime do at workload launch) and steady-state jit dispatch;
-  * replay   — deserialize a signed recording once, then execute.
-Replay wins launch-to-first-inference by the whole compile/trace cost and
-matches steady-state (the executable is identical) minus Python dispatch.
+Two claims, two sections:
+
+  * native vs replay, per arch — native pays trace+lower+compile at launch
+    and jit dispatch at steady state; replay deserializes a signed
+    recording once and then dispatches a pinned executable (the Replayer
+    fast path).  Replay wins launch by the whole compile cost and must not
+    lose steady state (``replay_not_slower_than_native``, with a 5%
+    tolerance: both sides run the identical executable, so steady state is
+    Python-dispatch noise; CI gates on the flag).
+
+  * the replay-plan ablation, one artifact (cody-mnist smoke prefill,
+    jobs pinned) over the emulated wifi link — the compaction stack
+    naive -> +dead-elim -> +poll-collapse -> +coalesce -> +fast-path must
+    strictly shrink total replay delay, while the committed write sequence,
+    the consumed readbacks, and the executable outputs stay bit-identical
+    to the naive replay (and to live execution).  The first four rows move
+    virtual link time; the fast-path row moves measured host dispatch time
+    on top of the best plan, so every rung of the ladder is a real
+    mechanism, not a unit change.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.api import Workspace
 from repro.configs import get_config, smoke_shrink
+from repro.core.attest import fingerprint
+from repro.core.netem import WIFI, NetworkEmulator
 from repro.core.recorder import record
 from repro.core.replay import Replayer
+from repro.core.replay_passes import PlanExecutor, plan_for
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
+from repro.record.cloud import REPLAY_CONSUMED_SITES
 from repro.sharding import rules_for
 from repro.training import steps as ST
 
+KEY = b"replay-bench-key"
+JOBS = 32            # pinned GPU job count, as in the record-time ablation
+DISPATCH_CALLS = 2000    # host-dispatch sample size for the fast-path rung
+STEADY_TOL = 1.05    # replay steady state within 5% of native (dispatch noise)
+SHAPES = dict(cache_len=64, block_k=4, batch=1, prefill_batch=1, seq=16)
 
+STACKS = [
+    ("naive", "none"),
+    ("+dead-elim", "dead"),
+    ("+poll-collapse", "dead,poll"),
+    ("+coalesce", "dead,poll,coalesce"),
+]
+
+
+def _steady_pair(fn_a, fn_b, iters: int = 30, repeats: int = 7):
+    """Min-of-``repeats`` block-averaged seconds/call for two callables,
+    INTERLEAVED a/b per round — the flag below gates CI, and timing the
+    two sides in separate phases lets allocator/thermal drift between the
+    phases masquerade as a dispatch difference."""
+    best_a = best_b = float("inf")
+    for _ in range(repeats):
+        for fn, which in ((fn_a, "a"), (fn_b, "b")):
+            t0 = time.perf_counter()
+            out = None
+            for _ in range(iters):
+                out = fn()
+            jax.block_until_ready(out)
+            dt = (time.perf_counter() - t0) / iters
+            if which == "a":
+                best_a = min(best_a, dt)
+            else:
+                best_b = min(best_b, dt)
+    return best_a, best_b
+
+
+# ------------------------------------------------------- native vs replay --
 def bench_arch(arch: str, iters: int = 30) -> dict:
     cfg = smoke_shrink(get_config(arch))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -46,28 +100,21 @@ def bench_arch(arch: str, iters: int = 30) -> dict:
     out = jitted(params, batch)
     jax.block_until_ready(out[0]["next_tokens"])
     native_launch = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = jitted(params, batch)
-    jax.block_until_ready(out[0]["next_tokens"])
-    native_steady = (time.perf_counter() - t0) / iters
 
     # --- record once ("cloud"), then replay ("TEE") ---
     rec = record(f"{arch}:prefill", fn, (params, batch), mesh=mesh)
-    blob = rec.sign_with(b"k").to_bytes()
+    blob = rec.sign_with(KEY).to_bytes()
     t0 = time.perf_counter()
-    # timing-only harness on bytes we just produced: unsigned load is an
-    # explicit opt-in (the serving paths always verify)
-    rp = Replayer(key=None, allow_unsigned=True)
+    rp = Replayer(key=KEY)
     name = rp.load(blob)
     out = rp.execute(name, params, batch)
     jax.block_until_ready(out[0]["next_tokens"])
     replay_launch = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = rp.execute(name, params, batch)
-    jax.block_until_ready(out[0]["next_tokens"])
-    replay_steady = (time.perf_counter() - t0) / iters
+    # steady state: replay runs on the pinned fast path (the launch call
+    # validated); interleaved with native so drift cancels
+    native_steady, replay_steady = _steady_pair(
+        lambda: jitted(params, batch),
+        lambda: rp.execute(name, params, batch), iters)
 
     return {"arch": arch,
             "native_launch_ms": round(native_launch * 1e3, 1),
@@ -75,16 +122,140 @@ def bench_arch(arch: str, iters: int = 30) -> dict:
             "launch_speedup": round(native_launch / replay_launch, 2),
             "native_steady_ms": round(native_steady * 1e3, 3),
             "replay_steady_ms": round(replay_steady * 1e3, 3),
-            "steady_ratio": round(replay_steady / native_steady, 3)}
+            "steady_ratio": round(replay_steady / native_steady, 3),
+            "fast_hits": rp.stats["fast_hits"],
+            "slow_validations": rp.stats["slow_validations"],
+            "replay_not_slower_than_native":
+                replay_steady <= native_steady * STEADY_TOL}
 
 
-def main(quick: bool = False):
+# --------------------------------------------------------- plan ablation --
+def _digest(tree) -> str:
+    return fingerprint([np.asarray(x).tobytes()
+                        for x in jax.tree.leaves(tree)])
+
+
+def _dispatch_delay(rp: Replayer, name: str, args, calls: int,
+                    repeats: int = 5) -> float:
+    """Host dispatch seconds for ``calls`` executes (min of repeats)."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = None
+        for _ in range(calls):
+            out = rp.execute(name, *args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def plan_ablation() -> dict:
+    ws = Workspace(key=KEY)
+    wl = ws.workload("cody-mnist", **SHAPES)
+    rec = wl.compile("prefill")
+    blob = rec.sign_with(KEY).to_bytes()
+
+    params = wl.params(0)
+    batch = {"tokens": jnp.ones((wl.prefill_batch, wl.seq), jnp.int32)}
+    fn, _specs, _donate = wl.step("prefill")
+    live_digest = _digest(jax.jit(fn)(params, batch))
+
+    # one multi-variant replayer (signature dispatch = the pre-fast-path
+    # slow path) and one sole-variant replayer (pinned fast path); both
+    # run the SAME executable, so outputs must agree with live
+    slow_rp = Replayer(key=KEY)
+    slow_rp.load(blob, name="bench")
+    rec_alt = record(rec.manifest["name"], fn,
+                     (params, {"tokens": jax.ShapeDtypeStruct(
+                         (wl.prefill_batch, wl.seq * 2), jnp.int32)}),
+                     mesh=wl.mesh)
+    slow_rp.load(rec_alt.sign_with(KEY).to_bytes(), name="bench")
+    fast_rp = Replayer(key=KEY)
+    fast_rp.load(blob, name="bench")
+    naive_digest = _digest(fast_rp.execute("bench", params, batch))
+
+    slow_disp = _dispatch_delay(slow_rp, "bench", (params, batch),
+                                DISPATCH_CALLS)
+    fast_disp = _dispatch_delay(fast_rp, "bench", (params, batch),
+                                DISPATCH_CALLS)
+
+    rows, witness, bit_exact = [], None, True
+    for label, passes in STACKS:
+        plan = plan_for(rec, passes, jobs=JOBS)
+        ex = PlanExecutor(netem=NetworkEmulator(WIFI))
+        rep = ex.run(plan)
+        w = (tuple(ex.write_log()),
+             tuple(ex.consumed_log(REPLAY_CONSUMED_SITES)))
+        if witness is None:
+            witness = w
+        bit_exact &= (w == witness)
+        rows.append({
+            "stack": label, "net": "wifi", "passes": rep["passes"],
+            "plan_virtual_s": rep["virtual_time_s"],
+            "dispatch_wall_s": round(slow_disp, 6),
+            "total_delay_s": round(rep["virtual_time_s"] + slow_disp, 6),
+            "blocking_rts": rep["blocking_round_trips"],
+            "dispatches": rep["dispatches"],
+            "collapsed_spins": rep["collapsed_spins"],
+            "jobs": rep["jobs"],
+        })
+    # the fast-path rung: best plan, but host dispatch drops the signature
+    # build + dict probe for DISPATCH_CALLS steady-state executes
+    best = rows[-1]
+    rows.append({
+        "stack": "+fast-path", "net": "wifi",
+        "passes": best["passes"] + ["fastpath"],
+        "plan_virtual_s": best["plan_virtual_s"],
+        "dispatch_wall_s": round(fast_disp, 6),
+        "total_delay_s": round(best["plan_virtual_s"] + fast_disp, 6),
+        "blocking_rts": best["blocking_rts"],
+        "dispatches": best["dispatches"],
+        "collapsed_spins": best["collapsed_spins"],
+        "jobs": best["jobs"],
+    })
+
+    delays = [r["total_delay_s"] for r in rows]
+    replay_digest = _digest(fast_rp.execute("bench", params, batch))
+    return {
+        "rows": rows,
+        "delays_s": delays,
+        "monotone_virtual_time": all(a > b for a, b in zip(delays,
+                                                           delays[1:])),
+        "bit_exact_vs_naive_replay": bit_exact
+        and replay_digest == naive_digest,
+        "bit_exact_vs_live": replay_digest == live_digest,
+        "all_passes_reduction_vs_naive": round(1 - delays[-1] / delays[0], 4),
+        "dispatch_calls": DISPATCH_CALLS,
+        "dispatch_speedup": round(slow_disp / fast_disp, 2),
+        "fast_replayer_stats": dict(fast_rp.stats),
+    }
+
+
+def main(quick: bool = False, out_json: str = "BENCH_replay.json"):
     archs = ["qwen2.5-3b", "xlstm-350m"] if quick else \
         ["qwen2.5-3b", "starcoder2-7b", "mixtral-8x22b", "xlstm-350m",
          "zamba2-1.2b", "whisper-large-v3"]
-    return [bench_arch(a) for a in archs]
+    native_rows = [bench_arch(a) for a in archs]
+    ablation = plan_ablation()
+    summary = {
+        "native_rows": native_rows,
+        "ablation": ablation,
+        "steady_tolerance": STEADY_TOL,
+        "replay_not_slower_than_native":
+            all(r["replay_not_slower_than_native"] for r in native_rows),
+        "monotone_virtual_time": ablation["monotone_virtual_time"],
+        "bit_exact_vs_naive_replay": ablation["bit_exact_vs_naive_replay"],
+        "bit_exact_vs_live": ablation["bit_exact_vs_live"],
+    }
+    with open(out_json, "w") as f:
+        json.dump(summary, f, indent=1)
+    return native_rows, ablation
 
 
 if __name__ == "__main__":
-    for r in main(quick=True):
+    rows, abl = main(quick=True)
+    for r in rows:
         print(r)
+    for r in abl["rows"]:
+        print(r)
+    print({k: v for k, v in abl.items() if k != "rows"})

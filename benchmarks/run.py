@@ -55,14 +55,36 @@ def _decode_pipeline_section(quick: bool):
               f"rts={r['blocking_round_trips']}")
 
 
+def _replay_section(quick: bool):
+    _section("Replay vs native + replay-plan compaction ablation "
+             "(-> BENCH_replay.json)")
+    from benchmarks import replay_native
+    native_rows, ablation = replay_native.main(quick=quick)
+    for r in native_rows:
+        print(f"replay_{r['arch']},{r['replay_steady_ms']*1e3:.0f},"
+              f"native_ms={r['native_steady_ms']};"
+              f"launch_speedup={r['launch_speedup']}x;"
+              f"steady_ratio={r['steady_ratio']};"
+              f"not_slower={r['replay_not_slower_than_native']}")
+    for r in ablation["rows"]:
+        print(f"replay_plan_{r['stack'].lstrip('+')},"
+              f"{r['total_delay_s']*1e6:.0f},"
+              f"rts={r['blocking_rts']};dispatches={r['dispatches']};"
+              f"collapsed={r['collapsed_spins']}")
+    print(f"# replay ablation: monotone={ablation['monotone_virtual_time']};"
+          f"bit_exact_vs_naive={ablation['bit_exact_vs_naive_replay']};"
+          f"bit_exact_vs_live={ablation['bit_exact_vs_live']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: decode pipeline + multitenant + registry "
-                         "+ recording-ablation benches only, emit "
+                         "+ recording-ablation + replay benches only, emit "
                          "BENCH_decode.json + BENCH_multitenant.json + "
-                         "BENCH_registry.json + BENCH_recording.json")
+                         "BENCH_registry.json + BENCH_recording.json + "
+                         "BENCH_replay.json")
     args = ap.parse_args()
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -72,6 +94,7 @@ def main() -> None:
         _multitenant_section(quick=True)
         _registry_section(quick=True)
         _recording_ablation_section(quick=True)
+        _replay_section(quick=True)
         print(f"\n# total bench wall time: {time.time()-t0:.1f}s")
         return
 
@@ -79,6 +102,7 @@ def main() -> None:
     _multitenant_section(quick=args.quick)
     _registry_section(quick=args.quick)
     _recording_ablation_section(quick=args.quick)
+    _replay_section(quick=args.quick)
 
     _section("Paper Fig.7 + Table 1: recording delays (emulated networks)")
     from benchmarks import record_replay
@@ -87,14 +111,6 @@ def main() -> None:
               f"{r['delay_s']*1e6:.0f},"
               f"rts={r['blocking_rts']};syncMB={r['sync_MB']};"
               f"mispredicts={r['mispredicts']}")
-
-    _section("Paper Table 2: replay vs native")
-    from benchmarks import replay_native
-    for r in replay_native.main(quick=args.quick):
-        print(f"replay_{r['arch']},{r['replay_steady_ms']*1e3:.0f},"
-              f"native_ms={r['native_steady_ms']};"
-              f"launch_speedup={r['launch_speedup']}x;"
-              f"steady_ratio={r['steady_ratio']}")
 
     _section("Roofline (from dry-run artifacts; single-pod)")
     from benchmarks import roofline

@@ -360,6 +360,16 @@ def analyze(text: str, num_devices: int = 1, mode: str = "final") -> Dict:
     return Analyzer(text, num_devices, mode).cost().as_dict()
 
 
+def analyze_compiled(compiled, num_devices: int = 1,
+                     mode: str = "final") -> Dict:
+    """Analyze a live ``jax`` Compiled object (record side).  The replay
+    side has no ``as_text()`` — a deserialized executable keeps only what
+    the recording manifest carried — so benches comparing native vs replay
+    pair this with ``roofline.from_recording_manifest`` to show both modes
+    sit at the same roofline point."""
+    return analyze(compiled.as_text(), num_devices, mode)
+
+
 def top_collectives(text: str, num_devices: int = 1, k: int = 20):
     """Debug: largest collectives with while-trip multipliers applied."""
     an = Analyzer(text, num_devices)

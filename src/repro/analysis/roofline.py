@@ -69,6 +69,22 @@ class Roofline:
         }
 
 
+def from_recording_manifest(manifest: Dict, model_flops_total: float,
+                            num_chips: int = 1) -> Roofline:
+    """Roofline terms from a recording's MANIFEST alone — the replay-side
+    counterpart of ``from_hlo``.  A replayer never sees HLO text (only the
+    serialized executable crosses the trust boundary), but the manifest
+    carries XLA's own cost analysis (``cost``: 'flops', 'bytes accessed')
+    captured at record time, which is enough to place the replayed
+    executable on the same roofline point as its native twin: replay
+    changes dispatch, not the compiled computation."""
+    cost = manifest.get("cost", {}) or {}
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    return from_hlo({"flops": flops, "hbm_bytes": hbm, "coll_bytes": 0.0},
+                    model_flops_total, num_chips)
+
+
 def from_hlo(hlo_cost: Dict, model_flops_total: float, num_chips: int) -> Roofline:
     mf = model_flops_total / num_chips
     return Roofline(

@@ -132,6 +132,8 @@ class Workload:
                                   "config_fp": self.config_fp},
                                  self.mesh_fp) for k in KINDS}
         self.sessions = []        # (kind, session report) per record()
+        self.replays = []         # (kind, executor report) per replay()
+        self.replayers = []       # every Replayer built for this workload
         self._live: Optional[LiveChannel] = None
         self._params = {}         # seed -> initialized params
 
@@ -199,6 +201,25 @@ class Workload:
                          static_meta=self.static_meta(kind), session=session)
         self.sessions.append((kind, session.report()))
         return rec
+
+    # -------------------------------------------------------------- replay --
+    def replay(self, kind: str = "prefill", *, passes=None,
+               artifact: Optional[Recording] = None,
+               jobs: Optional[int] = None) -> dict:
+        """Replay-side interaction-plan execution: compact the recording's
+        plan with the replay passes (``None`` -> the workspace default)
+        and play it through a ``PlanExecutor`` over a fresh emulator on
+        the workspace's link profile — the priced counterpart of
+        ``record()``.  Returns the executor report (also appended to
+        ``self.replays`` for ``report()``)."""
+        from repro.core.replay_passes import PlanExecutor, plan_for
+        rec = artifact if artifact is not None else self.compile(kind)
+        kind = rec.manifest.get("static", {}).get("kind", kind)
+        passes = self.ws.replay_passes if passes is None else passes
+        plan = plan_for(rec, passes, jobs=jobs)
+        rep = PlanExecutor(netem=self.ws.fresh_netem()).run(plan)
+        self.replays.append((kind, rep))
+        return rep
 
     # ------------------------------------------------------------ registry --
     def publish(self, rec: Recording, key: Optional[str] = None) -> dict:
@@ -299,6 +320,7 @@ class Workload:
                     record_fn = self._record_fn(kind, reg_key)
             items.append((reg_key, record_fn))
         rp = Replayer(key=self.ws.key)
+        self.replayers.append(rp)
         return self.ws.client.into_channel(rp, items[0], items[1], warm=True)
 
     def _live_channel(self) -> LiveChannel:
@@ -338,6 +360,7 @@ class Workload:
             ch = self._registry_channel(record_on_miss)
         elif recordings_dir:
             rp = Replayer(key=self.ws.key)
+            self.replayers.append(rp)
             pre = rp.load(os.path.join(
                 recordings_dir, recording_name(self.cfg.name, "prefill")))
             dec = rp.load(os.path.join(
@@ -376,8 +399,20 @@ class Workload:
         return eng
 
     # ----------------------------------------------------------- reporting --
+    def replayer_stats(self) -> dict:
+        """Summed counters over every Replayer this workload built —
+        the fast-path hit/validation split the serving report surfaces."""
+        totals: dict = {}
+        for rp in self.replayers:
+            for k, v in rp.stats.items():
+                totals[k] = totals.get(k, 0) + v
+        return totals
+
     def report(self) -> dict:
         return {"arch": self.cfg.name,
                 "keys": dict(self._keys),
                 "sessions": [dict(rep, kind=kind)
-                             for kind, rep in self.sessions]}
+                             for kind, rep in self.sessions],
+                "replays": [dict(rep, kind=kind)
+                            for kind, rep in self.replays],
+                "replayer_stats": self.replayer_stats()}

@@ -48,7 +48,7 @@ class Workspace:
 
     def __init__(self, registry: Union[None, str, bool] = None, *,
                  key: bytes = b"", net: _Net = None,
-                 record_passes="all"):
+                 record_passes="all", replay_passes="all"):
         if registry is False or registry == "":
             registry = None       # falsy spellings of "no registry"
         if registry is not None and not key:
@@ -60,6 +60,7 @@ class Workspace:
         self.registry = registry
         self.netem = _resolve_net(net)
         self.record_passes = record_passes
+        self.replay_passes = replay_passes
         self.workloads = []
         self._store: Optional[RecordingStore] = None
         self._service: Optional[RegistryService] = None
@@ -194,4 +195,17 @@ class Workspace:
             "sessions": [dict(rep, workload=wl.cfg.name, kind=kind)
                          for wl in self.workloads
                          for kind, rep in wl.sessions],
+            "replays": [dict(rep, workload=wl.cfg.name, kind=kind)
+                        for wl in self.workloads
+                        for kind, rep in wl.replays],
+            "replayer_stats": self._replayer_stats(),
         }
+
+    def _replayer_stats(self) -> dict:
+        """Summed Replayer counters across every workload — the serving-
+        level fast-path hit vs slow-validation split."""
+        totals: dict = {}
+        for wl in self.workloads:
+            for k, v in wl.replayer_stats().items():
+                totals[k] = totals.get(k, 0) + v
+        return totals

@@ -14,6 +14,11 @@ from repro.core.metasync import DeltaSync, full_pack, is_metastate, merge, split
 from repro.core.netem import (CELLULAR, LOCAL, PROFILES, WIFI, NetProfile,
                               NetworkEmulator)
 from repro.core.recording import Recording
+from repro.core.replay_passes import (REPLAY_PASS_NAMES, CommitCoalesce,
+                                      DeadRegisterElim, PlanExecutor,
+                                      PollCollapse, ReplayPlan, plan_for,
+                                      replay_plan_report,
+                                      resolve_replay_passes, verified_plan)
 from repro.core.speculation import (HistorySpeculator, MispredictError,
                                     SpeculativeRunner)
 
@@ -27,4 +32,7 @@ __all__ = [
     "LOCAL",
     "fingerprint", "sign", "verify", "TamperedRecordingError",
     "TopologyMismatchError", "UnverifiedRecordingError",
+    "REPLAY_PASS_NAMES", "ReplayPlan", "DeadRegisterElim", "PollCollapse",
+    "CommitCoalesce", "PlanExecutor", "plan_for", "verified_plan",
+    "replay_plan_report", "resolve_replay_passes",
 ]

@@ -121,8 +121,14 @@ class ReplayChannel(ExecutionChannel):
 
     @property
     def fixed_prompt_len(self) -> Optional[int]:
-        seq = self._rp.manifest(self._pre).get("static", {}).get("seq")
-        return int(seq) if seq else None
+        # several prefill shape-bucket variants may share the logical name;
+        # the prompt length is only "fixed" when every variant agrees
+        seqs = {m.get("static", {}).get("seq")
+                for m in self._rp.manifests(self._pre)}
+        if len(seqs) == 1:
+            seq = seqs.pop()
+            return int(seq) if seq else None
+        return None
 
     def prefill(self, params, batch):
         return self._rp.execute(self._pre, params, batch)

@@ -36,6 +36,7 @@ class NetworkEmulator:
         self.async_trips = 0          # speculative commits: wire, no stall
         self.bytes_sent = 0
         self.bytes_received = 0
+        self.collapsed_spins = 0      # poll spin trips folded into waits
 
     def round_trip(self, send_bytes: int = 64, recv_bytes: int = 64):
         """One synchronous request/response over the link."""
@@ -51,6 +52,14 @@ class NetworkEmulator:
         self.bytes_sent += send_bytes
         self.bytes_received += recv_bytes
         self.virtual_time_s += (send_bytes + recv_bytes) / self.profile.bw_bytes_s
+
+    def collapse_spins(self, n: int):
+        """A compacted replay plan folded ``n`` poll spin trips into an
+        enclosing completion wait.  The wait's own dispatch is billed
+        normally by its commit; this only tracks the trips that did NOT
+        cross the wire, so compacted-plan billing spans stay auditable
+        against the naive plan (replay-pass ablation)."""
+        self.collapsed_spins += int(n)
 
     def one_way(self, nbytes: int, direction: str = "send"):
         """One streamed transfer.  ``direction`` is from the client's point
@@ -112,7 +121,8 @@ class NetworkEmulator:
                 "round_trips": self.round_trips,
                 "async_trips": self.async_trips,
                 "bytes_sent": self.bytes_sent,
-                "bytes_received": self.bytes_received}
+                "bytes_received": self.bytes_received,
+                "collapsed_spins": self.collapsed_spins}
 
     def delta(self, mark: dict) -> dict:
         """Counters accumulated since ``mark`` (a ``checkpoint()`` result).

@@ -20,6 +20,18 @@ per-call check is a tuple build + dict lookup, and a mismatch raises a
 clear ``ReplayArgumentError`` instead of an XLA crash deep in the TEE
 path.  ``warm`` runs a loaded executable once on zero inputs so the first
 real block of the serving pipeline pays no allocation/cold-start cost.
+
+The steady-state FAST PATH: once a sole-variant name has validated one
+call, the resolved executable is pinned and every later ``execute`` for
+that name dispatches directly — no ``jax.tree.leaves`` walk, no signature
+tuple build, no variant-dict probing.  On the decode hot path (thousands
+of identical-aval calls per stream) the signature build is ~half the
+Python dispatch cost, so this is what lets replay dispatch match native
+jit dispatch.  The pin is dropped the moment a second aval variant loads
+under the name (multi-variant names always dispatch by signature —
+correctness over speed).  ``stats['fast_hits']`` / ``stats['slow_
+validations']`` count the two paths; the serving stack reads them through
+``Workspace.report()``.
 """
 from __future__ import annotations
 
@@ -62,7 +74,10 @@ class Replayer:
         self._allow_unsigned = allow_unsigned
         self._enforce_topology = enforce_topology
         self._loaded = {}   # name -> {aval_sig: (exe, manifest, in_tree)}
-        self.stats = {"loads": 0, "executions": 0, "rejected": 0}
+        self._fast = {}     # name -> exe, sole-variant names only, pinned
+        #                     after the first validated execute()
+        self.stats = {"loads": 0, "executions": 0, "rejected": 0,
+                      "fast_hits": 0, "slow_validations": 0}
 
     def load(self, path_or_bytes, name: Optional[str] = None):
         try:
@@ -94,6 +109,9 @@ class Replayer:
         sig = tuple((tuple(i["shape"]), i["dtype"])
                     for i in rec.manifest["inputs"])
         self._loaded.setdefault(nm, {})[sig] = (exe, rec.manifest, in_tree)
+        # any load under this name invalidates the fast-path pin: the name
+        # may now be multi-variant, which must dispatch by signature
+        self._fast.pop(nm, None)
         self.stats["loads"] += 1
         return nm
 
@@ -106,13 +124,40 @@ class Replayer:
             names.append(self.load(path, name))
         return names
 
-    def manifest(self, name: str) -> dict:
+    def manifest(self, name: str, signature: Optional[tuple] = None) -> dict:
+        """Manifest of a loaded recording.  With one variant loaded under
+        ``name`` the answer is unambiguous; with several, the caller must
+        say which (``signature`` = the aval signature used as the cache
+        key) — silently returning *some* variant would leak dict ordering
+        into replay behavior."""
         variants = self._loaded[name]
+        if signature is not None:
+            try:
+                return variants[signature][1]
+            except KeyError:
+                raise ReplayArgumentError(
+                    f"no variant of '{name}' with signature "
+                    f"{self._describe(signature)}") from None
+        if len(variants) != 1:
+            raise ReplayArgumentError(
+                f"'{name}' has {len(variants)} loaded variants; pass "
+                "signature=... to pick one (or use manifests())")
         return next(iter(variants.values()))[1]
+
+    def manifests(self, name: str) -> list:
+        """Manifests of every loaded variant of ``name`` (load order)."""
+        return [m for _exe, m, _tree in self._loaded[name].values()]
 
     def execute(self, name: str, *args) -> Any:
         """Run the recorded executable on new inputs.  No retracing ever;
-        the aval lookup doubles as the shape/dtype validation."""
+        the aval lookup doubles as the shape/dtype validation — and once
+        a sole-variant name has validated one call, later calls take the
+        pinned fast path (no leaves walk, no signature build)."""
+        exe = self._fast.get(name)
+        if exe is not None:
+            self.stats["fast_hits"] += 1
+            self.stats["executions"] += 1
+            return exe(*args)
         variants = self._loaded[name]
         sig = _aval_signature(jax.tree.leaves(args))
         hit = variants.get(sig)
@@ -122,7 +167,10 @@ class Replayer:
                 f"replay args for '{name}' match no recorded executable.\n"
                 f"got:      {self._describe(sig)}\n"
                 f"recorded: {known}")
+        self.stats["slow_validations"] += 1
         self.stats["executions"] += 1
+        if len(variants) == 1:
+            self._fast[name] = hit[0]
         return hit[0](*args)
 
     def warm(self, name: str):

@@ -8,7 +8,7 @@ register-access interaction plan) collaborate through a
 record-time optimizations — deferral (§4.1+4.3), speculation (§4.2),
 metastate-only sync (§5) — composed as stackable interceptor passes.
 """
-from repro.record.cloud import CloudDryrun
+from repro.record.cloud import REPLAY_CONSUMED_SITES, CloudDryrun
 from repro.record.device import DeviceProxy, FlakyRegisterDevice
 from repro.record.session import (PASS_NAMES, DeferralPass, MetasyncPass,
                                   RecordingSession, SpeculationPass,
@@ -17,5 +17,5 @@ from repro.record.session import (PASS_NAMES, DeferralPass, MetasyncPass,
 __all__ = [
     "CloudDryrun", "DeviceProxy", "FlakyRegisterDevice", "RecordingSession",
     "DeferralPass", "SpeculationPass", "MetasyncPass", "WireLink",
-    "PASS_NAMES", "resolve_passes",
+    "PASS_NAMES", "resolve_passes", "REPLAY_CONSUMED_SITES",
 ]

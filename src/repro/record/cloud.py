@@ -36,6 +36,17 @@ JOB_MIN, JOB_MAX = 12, 48
 DATA_FLOOR_BYTES = 256 << 10    # modeled GPU memory image floor per job
 DATA_CAP_BYTES = 1 << 20
 
+# Readbacks the downstream plan CONSUMES at replay time: the job completion
+# chain — the offloaded flush poll, the flush id it resolves to (job
+# chaining orders on it: ``job_state['job']['chain_prev_id']``), and the
+# final job status the replayer checks before retiring the job.  Every
+# other read (init probes, pwr/cfg status, irq fills) only steered the
+# live driver's record-time control flow; the recording has those branch
+# outcomes baked in, so their readbacks are dead weight during replay —
+# the liveness set the replay-side dead-access-elimination pass prunes to.
+REPLAY_CONSUMED_SITES = frozenset(
+    {"flush_poll", "latest_flush_id", "job_status"})
+
 
 class CloudDryrun:
     """Drives the compile stack and emits the register-access plan.
@@ -84,6 +95,15 @@ class CloudDryrun:
                     ("read", "job_status", None, True)]
             yield f"job{j}", ops
 
+    def consumed_readbacks(self) -> frozenset:
+        """Sites whose readback the plan consumes downstream at REPLAY
+        time (see ``REPLAY_CONSUMED_SITES``) — the liveness contract the
+        replay-side dead-register-access-elimination pass prunes against.
+        Every site in this set appears in the per-job segments of
+        ``interaction_plan``; dropping any of them would change the
+        consumed-readback log the compaction invariant pins."""
+        return REPLAY_CONSUMED_SITES
+
     # --------------------------------------------------------- job state --
     def data_bytes(self, rec: Recording) -> int:
         """Per-job GPU memory image size, from the artifact's memory
@@ -122,4 +142,4 @@ class CloudDryrun:
 
 
 __all__ = ["CloudDryrun", "PlanOp", "INIT_PROBES", "IRQ_FILL", "CDEP_EVERY",
-           "JOB_MIN", "JOB_MAX"]
+           "JOB_MIN", "JOB_MAX", "REPLAY_CONSUMED_SITES"]

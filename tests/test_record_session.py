@@ -250,7 +250,7 @@ def test_netem_checkpoint_delta_span_accounting():
     assert net.bytes_sent == 600
     assert net.delta(net.checkpoint()) == \
         {"time_s": 0.0, "round_trips": 0, "async_trips": 0,
-         "bytes_sent": 0, "bytes_received": 0}
+         "bytes_sent": 0, "bytes_received": 0, "collapsed_spins": 0}
 
 
 # ------------------------------------ registry record-on-miss via session --

@@ -1,0 +1,262 @@
+"""Replay-time plan compaction + Replayer fast path.
+
+Covers the replay-side pass stack (dead-register-access elimination,
+poll-spin collapsing, commit coalescing): per-pass bit-exactness of the
+committed write sequence and consumed readbacks vs the naive replay on
+BOTH recorded kinds (prefill + decode), poll-collapse netem billing
+exactness, tamper rejection of compacted plans, the coalesce dispatch
+arithmetic — and the Replayer's precompiled-dispatch fast path (pinned
+counters, multi-variant invalidation, deterministic ``manifest()``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Workspace
+from repro.core.attest import TamperedRecordingError, fingerprint
+from repro.core.netem import WIFI, NetworkEmulator
+from repro.core.recorder import record
+from repro.core.replay import ReplayArgumentError, Replayer
+from repro.core.replay_passes import (FUSE_JOBS, PlanExecutor, plan_for,
+                                      replay_plan_report,
+                                      resolve_replay_passes, verified_plan)
+from repro.record.cloud import REPLAY_CONSUMED_SITES, CloudDryrun
+from repro.record.device import POLL_TRIPS
+
+KEY = b"replay-pass-test-key"
+JOBS = 8
+SHAPES = dict(cache_len=32, block_k=4, batch=2, prefill_batch=1, seq=8)
+
+STACKS = ["none", "dead", "dead,poll", "all"]
+
+
+@pytest.fixture(scope="module")
+def ws():
+    return Workspace(key=KEY, net="wifi")
+
+
+@pytest.fixture(scope="module")
+def wl(ws):
+    return ws.workload("cody-mnist", **SHAPES)
+
+
+@pytest.fixture(scope="module", params=["prefill", "decode"])
+def rec(request, wl):
+    """One compiled artifact per recorded kind — the two model kinds the
+    per-pass bit-exactness sweep runs over."""
+    r = wl.compile(request.param)
+    r.sign_with(KEY)
+    return r
+
+
+def _run(rec_, passes, jobs=JOBS):
+    plan = plan_for(rec_, passes, jobs=jobs)
+    ex = PlanExecutor(netem=NetworkEmulator(WIFI))
+    rep = ex.run(plan)
+    return plan, ex, rep
+
+
+# ------------------------------------------------------------ pass stack --
+def test_resolve_replay_passes_spellings():
+    assert resolve_replay_passes("all") == ("dead", "poll", "coalesce")
+    assert resolve_replay_passes(None) == ("dead", "poll", "coalesce")
+    assert resolve_replay_passes("none") == ()
+    assert resolve_replay_passes("naive") == ()
+    # canonical order is imposed regardless of spelling order
+    assert resolve_replay_passes("coalesce,dead") == ("dead", "coalesce")
+    with pytest.raises(ValueError, match="unknown replay passes"):
+        resolve_replay_passes("dead,bogus")
+
+
+def test_per_pass_bit_exact_vs_naive_and_monotone(rec):
+    """Every pass stack must shrink virtual replay time WITHOUT changing
+    the committed write sequence or the consumed completion readbacks —
+    checked per recorded kind (prefill and decode)."""
+    witness, prev_t = None, None
+    for passes in STACKS:
+        _plan, ex, rep = _run(rec, passes)
+        w = (tuple(ex.write_log()),
+             tuple(ex.consumed_log(REPLAY_CONSUMED_SITES)))
+        if witness is None:
+            witness = w
+        assert w == witness, f"compaction changed replayed state at {passes}"
+        if prev_t is not None:
+            assert rep["virtual_time_s"] < prev_t, \
+                f"stack {passes} did not strictly reduce virtual time"
+        prev_t = rep["virtual_time_s"]
+    # the consumed chain carries real values: flush polls resolve the trip
+    # count, flush ids advance monotonically job over job
+    sites = [s for s, _v in witness[1]]
+    assert sites.count("latest_flush_id") == JOBS
+    flush_ids = [v for s, v in witness[1] if s == "latest_flush_id"]
+    assert flush_ids == list(range(1, JOBS + 1))
+
+
+def test_dead_elim_keeps_exactly_the_consumed_chain(rec):
+    plan, _ex, _rep = _run(rec, "dead")
+    read_sites = set(plan.op_sites("read"))
+    assert read_sites == {"latest_flush_id", "job_status"}
+    assert plan.acct["dead"]["reads_dropped"] > 0
+    # writes are never dropped: they are what drives the hardware
+    naive = plan_for(rec, "none", jobs=JOBS)
+    assert plan.op_sites("write") == naive.op_sites("write")
+
+
+def test_poll_collapse_billing_exact(rec):
+    """Collapsing a POLL_TRIPS spin into one wait must remove exactly
+    jobs*(POLL_TRIPS-1) blocking round trips, bill the collapsed trips to
+    the emulator's counter, and shave the exact per-trip virtual time."""
+    _p1, _e1, before = _run(rec, "dead")
+    _p2, _e2, after = _run(rec, "dead,poll")
+    spared = JOBS * (POLL_TRIPS - 1)
+    assert before["blocking_round_trips"] - after["blocking_round_trips"] \
+        == spared
+    assert after["collapsed_spins"] == spared
+    assert before["collapsed_spins"] == 0
+    # each spared trip cost one RTT + the batch's wire bytes (256 send
+    # floor + 64 header + 8 for the one readback)
+    per_trip = WIFI.rtt_s + (256 + 72) / WIFI.bw_bytes_s
+    assert before["virtual_time_s"] - after["virtual_time_s"] \
+        == pytest.approx(spared * per_trip)
+
+
+def test_coalesce_dispatch_arithmetic(rec):
+    _plan, _ex, rep = _run(rec, "all")
+    assert rep["dispatches"] == -(-JOBS // FUSE_JOBS)
+    # without dead-elim the init probes survive as ONE fused leading
+    # dispatch (non-job segments never fuse into job batches)
+    plan2, _ex2, rep2 = _run(rec, "poll,coalesce")
+    assert rep2["dispatches"] == 1 + -(-JOBS // FUSE_JOBS)
+    assert plan2.groups[0].label == "init"
+
+
+def test_consumed_sites_exposed_by_cloud(rec):
+    cloud = CloudDryrun(jobs=JOBS)
+    assert cloud.consumed_readbacks() == REPLAY_CONSUMED_SITES
+    # every consumed site must actually appear in the per-job plan
+    sites = {op[1] for _seg, ops in cloud.interaction_plan(rec)
+             for op in ops}
+    assert REPLAY_CONSUMED_SITES <= sites
+
+
+def test_verified_plan_rejects_tampered_blob(rec):
+    """A compacted plan is only built from a recording that verifies under
+    the caller's key — flip one byte anywhere and the plan never exists."""
+    blob = rec.to_bytes()
+    plan, r = verified_plan(blob, KEY, "all", jobs=JOBS)
+    assert plan.source_fingerprint == fingerprint(r.payload) \
+        == r.manifest["exec_fingerprint"]
+    bad = bytearray(blob)
+    bad[len(bad) // 2] ^= 0xFF
+    with pytest.raises(TamperedRecordingError):
+        verified_plan(bytes(bad), KEY, "all", jobs=JOBS)
+    with pytest.raises(TamperedRecordingError):
+        verified_plan(blob, b"wrong-key", "all", jobs=JOBS)
+
+
+def test_plan_executor_single_use(rec):
+    plan = plan_for(rec, "all", jobs=JOBS)
+    ex = PlanExecutor(netem=NetworkEmulator(WIFI))
+    ex.run(plan)
+    with pytest.raises(RuntimeError, match="single-use"):
+        ex.run(plan)
+
+
+def test_replay_plan_report_convenience(rec):
+    rep = replay_plan_report(rec, "all", netem=NetworkEmulator(WIFI),
+                             jobs=JOBS)
+    assert rep["passes"] == ["dead", "poll", "coalesce"]
+    assert rep["virtual_time_s"] > 0
+    assert rep["per_pass"]["coalesce"]["dispatches_after"] \
+        == rep["dispatches"]
+
+
+# -------------------------------------------------- Replayer fast path --
+def _record_double(n=4, name="double"):
+    r = record(name, lambda x: x * 2.0,
+               (jax.ShapeDtypeStruct((n,), jnp.float32),))
+    r.sign_with(KEY)
+    return r
+
+
+def test_fast_path_counters_pinned():
+    """First execute validates (slow path, pins the executable); every
+    later same-name execute is a fast hit."""
+    rp = Replayer(key=KEY)
+    rp.load(_record_double().to_bytes(), name="double")
+    x = jnp.ones(4, jnp.float32)
+    for _ in range(5):
+        out = rp.execute("double", x)
+    np.testing.assert_allclose(np.asarray(out), 2.0)
+    assert rp.stats["slow_validations"] == 1
+    assert rp.stats["fast_hits"] == 4
+    assert rp.stats["executions"] == 5
+
+
+def test_fast_path_disabled_by_second_variant():
+    """Loading a second aval variant under a pinned name must drop the pin:
+    multi-variant names always dispatch by signature (and still raise the
+    clear argument error on a miss)."""
+    rp = Replayer(key=KEY)
+    rp.load(_record_double(4).to_bytes(), name="double")
+    x4 = jnp.ones(4, jnp.float32)
+    rp.execute("double", x4)            # pins
+    rp.execute("double", x4)            # fast hit
+    assert rp.stats["fast_hits"] == 1
+    rp.load(_record_double(8).to_bytes(), name="double")
+    rp.execute("double", jnp.ones(8, jnp.float32))
+    rp.execute("double", x4)
+    assert rp.stats["fast_hits"] == 1   # no hits after invalidation
+    assert rp.stats["slow_validations"] == 3
+    with pytest.raises(ReplayArgumentError):
+        rp.execute("double", jnp.ones(5, jnp.float32))
+
+
+def test_manifest_deterministic():
+    """Satellite regression: ``manifest(name)`` must never silently pick an
+    arbitrary variant — sole variant returns, multi-variant raises unless
+    a signature selects, ``manifests()`` lists all."""
+    rp = Replayer(key=KEY)
+    rp.load(_record_double(4).to_bytes(), name="double")
+    assert rp.manifest("double")["inputs"][0]["shape"] == [4]
+    rp.load(_record_double(8).to_bytes(), name="double")
+    with pytest.raises(ReplayArgumentError, match="2 loaded variants"):
+        rp.manifest("double")
+    sig8 = (((8,), "float32"),)
+    assert rp.manifest("double", signature=sig8)["inputs"][0]["shape"] == [8]
+    with pytest.raises(ReplayArgumentError, match="no variant"):
+        rp.manifest("double", signature=(((5,), "float32"),))
+    assert [m["inputs"][0]["shape"] for m in rp.manifests("double")] \
+        == [[4], [8]]
+
+
+def test_workspace_report_surfaces_replayer_stats(wl, ws):
+    """The serving stack reads fast-path hit counts through the workload
+    and workspace reports; ``Workload.replay`` reports land there too."""
+    rp = Replayer(key=KEY)
+    rp.load(_record_double(4, name="stats").to_bytes(), name="stats")
+    x = jnp.ones(4, jnp.float32)
+    for _ in range(3):
+        rp.execute("stats", x)
+    wl.replayers.append(rp)
+    stats = wl.replayer_stats()
+    assert stats["fast_hits"] == 2 and stats["slow_validations"] == 1
+    rep = ws.report()
+    assert rep["replayer_stats"]["fast_hits"] >= 2
+    assert "replays" in rep
+
+
+def test_workload_replay_reports(ws, wl, rec):
+    """``Workload.replay`` prices the compacted plan over the workspace
+    link and appends to the report stream, mirroring ``record``."""
+    n_before = len(wl.replays)
+    full = wl.replay(artifact=rec, passes="all", jobs=JOBS)
+    naive = wl.replay(artifact=rec, passes="none", jobs=JOBS)
+    assert len(wl.replays) == n_before + 2
+    assert full["virtual_time_s"] < naive["virtual_time_s"]
+    kinds = {k for k, _r in wl.replays}
+    assert kinds <= {"prefill", "decode"}
+    assert len(ws.report()["replays"]) >= 2
