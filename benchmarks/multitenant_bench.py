@@ -42,11 +42,16 @@ def _stream_row(name, ex, outs, wall_s):
     lat = sorted(r.finish_t - r.submit_t for r in ex.requests.values()
                  if r.done)
     blocks = int(ex.stats["spec_blocks"] + ex.stats["sync_blocks"])
+    # per-stream latency quantiles from the metrics layer (the executor
+    # observes request_latency_s{stream=...} at every retire)
+    quant = (ex.metrics.quantiles("request_latency_s", stream=ex.name)
+             if ex.metrics is not None else None)
     return {
         "stream": name,
         "tokens": toks,
         "wall_s": round(wall_s, 4),
         "p50_latency_s": round(lat[len(lat) // 2], 4) if lat else None,
+        "latency_quantiles": quant or {"p50": 0.0, "p99": 0.0, "p999": 0.0},
         "host_syncs": int(ex.stats["host_syncs"]),
         "syncs_per_token": round(ex.stats["host_syncs"] / toks, 4),
         "spec_hit_rate": round(ex.stats["spec_blocks"] / blocks, 4)
@@ -59,10 +64,11 @@ def _stream_row(name, ex, outs, wall_s):
     }
 
 
-def main(quick: bool = False, out_json: str = "BENCH_multitenant.json"):
+def main(quick: bool = False, out_json: str = "BENCH_multitenant.json",
+         out_trace: str = "TRACE_multitenant.json"):
     requests = 4 if quick else 8
     max_new = 16 if quick else 32
-    ws = Workspace()
+    ws = Workspace(trace=True)
     wls = {arch: ws.workload(arch, cache_len=CACHE_LEN, block_k=BLOCK_K,
                              batch=N_SLOTS) for arch in ARCHS}
     prompts = {arch: _prompts(wls[arch].cfg, requests, 100 + i)
@@ -106,6 +112,7 @@ def main(quick: bool = False, out_json: str = "BENCH_multitenant.json"):
         "solo": list(solo_rows.values()),
         "multi": list(multi_rows.values()),
         "frontier": dict(sched.frontier.stats),
+        "scheduler": sched.stats(),
         # acceptance: multi-tenancy adds no host syncs and changes no token
         "bit_exact_vs_solo": all(
             multi_rows[a]["outputs_digest"] == solo_rows[a]["outputs_digest"]
@@ -116,6 +123,8 @@ def main(quick: bool = False, out_json: str = "BENCH_multitenant.json"):
     }
     with open(out_json, "w") as f:
         json.dump(result, f, indent=2)
+    if out_trace:
+        ws.tracer.dump(out_trace)
     return [*result["solo"], *[{**r, "stream": r["stream"] + "+mt"}
                                for r in result["multi"]]]
 

@@ -217,7 +217,8 @@ class Workload:
         kind = rec.manifest.get("static", {}).get("kind", kind)
         passes = self.ws.replay_passes if passes is None else passes
         plan = plan_for(rec, passes, jobs=jobs)
-        rep = PlanExecutor(netem=self.ws.fresh_netem()).run(plan)
+        rep = PlanExecutor(netem=self.ws.fresh_netem(),
+                           tracer=self.ws.tracer).run(plan)
         self.replays.append((kind, rep))
         return rep
 
@@ -393,6 +394,7 @@ class Workload:
         if params is None:
             params = self.params(seed)
         eng = Engine(params, channel=channel, netem=self.ws.netem,
+                     tracer=self.ws.tracer,
                      **self.stream_kwargs(speculate=speculate,
                                           pipeline_depth=pipeline_depth))
         eng.registry_client = self.ws.registry_client

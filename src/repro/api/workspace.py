@@ -15,6 +15,8 @@ from typing import Optional, Union
 
 from repro.configs import get_config, smoke_shrink
 from repro.core.netem import PROFILES, NetProfile, NetworkEmulator
+from repro.obs.metrics import Metrics
+from repro.obs.trace import NULL, Tracer
 from repro.record import CloudDryrun, RecordingSession
 from repro.registry import RecordingStore, RegistryClient, RegistryService
 from repro.serving.scheduler import Scheduler
@@ -48,7 +50,8 @@ class Workspace:
 
     def __init__(self, registry: Union[None, str, bool] = None, *,
                  key: bytes = b"", net: _Net = None,
-                 record_passes="all", replay_passes="all"):
+                 record_passes="all", replay_passes="all",
+                 trace: Union[bool, Tracer] = False):
         if registry is False or registry == "":
             registry = None       # falsy spellings of "no registry"
         if registry is not None and not key:
@@ -62,6 +65,21 @@ class Workspace:
         self.record_passes = record_passes
         self.replay_passes = replay_passes
         self.workloads = []
+        self.schedulers = []
+        self.metrics = Metrics()
+        # trace=True builds a Tracer on the workspace link's virtual clock
+        # (constant 0 base when there is no link — scoped components rebase
+        # their own emulators); trace=False leaves the falsy NULL tracer so
+        # every traced() call site is a single truthiness check
+        if isinstance(trace, Tracer):
+            self.tracer = trace
+        elif trace:
+            net_ref = self.netem
+            self.tracer = Tracer(
+                clock=(lambda: net_ref.virtual_time_s)
+                if net_ref is not None else None)
+        else:
+            self.tracer = NULL
         self._store: Optional[RecordingStore] = None
         self._service: Optional[RegistryService] = None
         self._client: Optional[RegistryClient] = None
@@ -100,7 +118,7 @@ class Workspace:
             self._service = RegistryService(
                 self.store, signing_key=self.key,
                 record_profile=self.profile,
-                record_passes=self.record_passes)
+                record_passes=self.record_passes, tracer=self.tracer)
         return self._service
 
     @property
@@ -123,7 +141,8 @@ class Workspace:
         fetch cache; optionally its own emulator)."""
         return RegistryClient(self.service,
                               netem=netem if netem is not None
-                              else self.netem, key=self.key)
+                              else self.netem, key=self.key,
+                              tracer=self.tracer)
 
     # ------------------------------------------------------------- record --
     def session(self, passes=None, jobs: Optional[int] = None
@@ -135,8 +154,10 @@ class Workspace:
         cloud = CloudDryrun(jobs=jobs) if jobs is not None else None
         if self.netem is not None:
             return RecordingSession.for_profile(self.profile, passes=passes,
-                                                cloud=cloud)
-        return RecordingSession.local(passes=passes, cloud=cloud)
+                                                cloud=cloud,
+                                                tracer=self.tracer)
+        return RecordingSession.local(passes=passes, cloud=cloud,
+                                      tracer=self.tracer)
 
     # ---------------------------------------------------------- workloads --
     def workload(self, arch, *, shapes: Optional[dict] = None, mesh=None,
@@ -169,7 +190,9 @@ class Workspace:
         own shapes (it is already an identity; the kwargs do not apply).
         Returns ``(scheduler, {name: workload})``."""
         sched = Scheduler(netem=self.netem, max_live_slots=max_live_slots,
-                          stall_limit=stall_limit)
+                          stall_limit=stall_limit, tracer=self.tracer,
+                          metrics=self.metrics)
+        self.schedulers.append(sched)
         out = {}
         for i, s in enumerate(streams):
             wl = s if isinstance(s, Workload) else self.workload(
@@ -184,8 +207,11 @@ class Workspace:
     # ----------------------------------------------------------- reporting --
     def report(self) -> dict:
         """Aggregate accounting: the link emulator's totals, registry
-        client/service stats, and every record-session report made
-        through this workspace's workloads."""
+        client/service stats, every record-session report made through
+        this workspace's workloads, the metrics registry snapshot
+        (latency quantiles and all), and each scheduler's public stats.
+        The shape is pinned by ``repro.obs.schema.check_workspace_report``
+        so fields can't silently vanish."""
         return {
             "net": self.netem.snapshot() if self.netem is not None else None,
             "registry_client": dict(self._client.stats)
@@ -199,6 +225,8 @@ class Workspace:
                         for wl in self.workloads
                         for kind, rep in wl.replays],
             "replayer_stats": self._replayer_stats(),
+            "metrics": self.metrics.snapshot(),
+            "schedulers": [s.stats() for s in self.schedulers],
         }
 
     def _replayer_stats(self) -> dict:

@@ -106,8 +106,12 @@ class NetworkEmulator:
         return chunks
 
     def snapshot(self) -> dict:
-        return {"time_s": self.virtual_time_s, "round_trips": self.round_trips,
-                "bytes": self.bytes_sent + self.bytes_received}
+        """Public counter snapshot: the ``checkpoint()`` shape (so
+        ``async_trips``/``collapsed_spins`` are never dropped) plus a
+        combined ``bytes`` total for quick display."""
+        d = self.checkpoint()
+        d["bytes"] = d["bytes_sent"] + d["bytes_received"]
+        return d
 
     # -- span accounting ---------------------------------------------------
     # ``reset()`` is a global zeroing — unusable by nested consumers (a

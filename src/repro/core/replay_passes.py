@@ -282,45 +282,60 @@ class PlanExecutor:
     belong to one replay.
     """
 
-    def __init__(self, netem=None, device=None):
+    def __init__(self, netem=None, device=None, tracer=None):
+        from repro.obs.trace import NULL
         from repro.record.device import POLL_TRIPS, DeviceProxy
         self.device = device if device is not None else DeviceProxy()
         self.netem = netem
+        self.tracer = tracer if tracer is not None else NULL
         self.poll_trips = POLL_TRIPS
         self.q = CommitQueue(self.device.channel, netem=netem,
                              name="replay-plan")
         self._ran = False
 
     def run(self, plan: ReplayPlan) -> dict:
+        from repro.obs.trace import traced
         if self._ran:
             raise RuntimeError("PlanExecutor is single-use: build a new "
                                "executor per replayed plan")
         self._ran = True
         mark = self.netem.checkpoint() if self.netem else None
         q = self.q
-        for g in plan.groups:
-            if len(g.ops) == 1 and g.ops[0][0] == "poll":
-                # naive spin, one blocking round trip per trip: warm-up
-                # trips re-read the poll site (not-ready), the final trip
-                # is the dispatch that resolves the completion value
-                for _ in range(self.poll_trips - 1):
-                    q.read(g.ops[0][1])
+        tr = self.tracer
+        with tr.clock_scope(self.netem):
+            for i, g in enumerate(plan.groups):
+                if len(g.ops) == 1 and g.ops[0][0] == "poll":
+                    # naive spin, one blocking round trip per trip: warm-up
+                    # trips re-read the poll site (not-ready), the final trip
+                    # is the dispatch that resolves the completion value
+                    with traced(tr, "replay.poll_spin", "replay",
+                                group=i, site=g.ops[0][1],
+                                trips=self.poll_trips):
+                        for _ in range(self.poll_trips - 1):
+                            q.read(g.ops[0][1])
+                            q.commit()
+                        q.poll(g.ops[0][1])
+                        q.commit()
+                    continue
+                with traced(tr, "replay.dispatch", "replay",
+                            group=i, ops=len(g.ops)):
+                    for kind, site, payload, _cdep in g.ops:
+                        if kind == "write":
+                            q.write(site, payload)
+                        elif kind == "read":
+                            q.read(site)
+                        elif kind in ("poll", "wait"):
+                            q.poll(site)  # offloaded device-side loop
+                            if kind == "wait" and self.netem is not None:
+                                self.netem.collapse_spins(payload - 1)
+                                if tr:
+                                    tr.instant("replay.collapsed_poll",
+                                               "replay", group=i, site=site,
+                                               spins=payload - 1)
+                        else:
+                            raise ValueError(
+                                f"unknown replay op kind {kind!r}")
                     q.commit()
-                q.poll(g.ops[0][1])
-                q.commit()
-                continue
-            for kind, site, payload, _cdep in g.ops:
-                if kind == "write":
-                    q.write(site, payload)
-                elif kind == "read":
-                    q.read(site)
-                elif kind in ("poll", "wait"):
-                    q.poll(site)          # offloaded device-side loop
-                    if kind == "wait" and self.netem is not None:
-                        self.netem.collapse_spins(payload - 1)
-                else:
-                    raise ValueError(f"unknown replay op kind {kind!r}")
-            q.commit()
         totals = self.netem.delta(mark) if mark is not None else {}
         return self._report(plan, totals)
 

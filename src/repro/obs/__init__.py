@@ -1,0 +1,18 @@
+"""repro.obs — virtual-time tracing, metrics, and report schemas.
+
+One observability layer for the whole stack: ``Tracer`` (deterministic
+virtual-clock spans, Perfetto-loadable export), ``Metrics``
+(counter/histogram registry with p50/p99/p99.9 summaries), and the
+schema checks that pin ``Workspace.report()`` / ``BENCH_*.json`` shapes.
+"""
+from repro.obs.metrics import (Counter, Histogram, Metrics, QUANTILE_KEYS,
+                               metric_key)
+from repro.obs.schema import (SchemaError, check_bench_file,
+                              check_workspace_report)
+from repro.obs.trace import NULL, NullTracer, Tracer, traced
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL", "traced",
+    "Metrics", "Counter", "Histogram", "metric_key", "QUANTILE_KEYS",
+    "SchemaError", "check_workspace_report", "check_bench_file",
+]

@@ -1,0 +1,180 @@
+"""Report/artifact schema checks — observability fields can't silently die.
+
+PR 7's motivating bug: ``NetworkEmulator.snapshot()`` silently dropped
+``async_trips``/``collapsed_spins``, so ``Workspace.report()["net"]``
+under-reported async and collapsed traffic for two PRs with no test
+noticing.  This module pins the shapes:
+
+  * ``check_workspace_report`` — the ``Workspace.report()`` contract
+    (net / registry / sessions / replays / metrics / schedulers);
+  * ``check_bench_file`` — per-``BENCH_*.json`` required keys plus the
+    acceptance FLAGS each artifact asserts about itself (bit-exactness,
+    monotone ladders, trace attribution): a flag that flips to False
+    fails the check, so CI catches regressions, not just vanished keys;
+  * a CLI for the CI step::
+
+        PYTHONPATH=src python -m repro.obs.schema BENCH_*.json TRACE_*.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.obs.metrics import QUANTILE_KEYS
+
+
+class SchemaError(ValueError):
+    """A report/artifact is missing required observability fields (or an
+    acceptance flag it declares about itself is False)."""
+
+
+def _require(d: dict, keys, where: str) -> None:
+    if not isinstance(d, dict):
+        raise SchemaError(f"{where}: expected a dict, got {type(d).__name__}")
+    missing = [k for k in keys if k not in d]
+    if missing:
+        raise SchemaError(f"{where}: missing fields {missing}")
+
+
+def _flags(d: dict, keys, where: str) -> None:
+    _require(d, keys, where)
+    bad = [k for k in keys if d[k] is not True]
+    if bad:
+        raise SchemaError(f"{where}: acceptance flags not True: {bad}")
+
+
+NET_KEYS = ("time_s", "round_trips", "async_trips", "bytes_sent",
+            "bytes_received", "collapsed_spins", "bytes")
+SESSION_KEYS = ("net", "passes", "virtual_time_s", "blocking_round_trips",
+                "async_round_trips", "bytes_sent", "bytes_received", "jobs",
+                "ops_executed", "per_pass")
+REPLAY_KEYS = ("net", "passes", "virtual_time_s", "blocking_round_trips",
+               "collapsed_spins", "dispatches", "plan_ops", "jobs",
+               "per_pass")
+HIST_KEYS = ("count", "sum", "min", "max") + QUANTILE_KEYS
+SCHED_KEYS = ("preemptions", "eviction_unsupported", "live_slots", "streams")
+SCHED_STREAM_KEYS = ("stalled", "stall_hwm", "unevictable",
+                     "evicted_requests", "admissions_deferred")
+
+
+def check_histogram_summary(s: dict, where: str = "histogram") -> dict:
+    _require(s, HIST_KEYS, where)
+    return s
+
+
+def check_scheduler_stats(s: dict, where: str = "scheduler") -> dict:
+    _require(s, SCHED_KEYS, where)
+    for name, row in s["streams"].items():
+        _require(row, SCHED_STREAM_KEYS, f"{where}.streams[{name}]")
+    return s
+
+
+def check_workspace_report(rep: dict) -> dict:
+    """Validate the full ``Workspace.report()`` shape; returns ``rep``."""
+    _require(rep, ("net", "registry_client", "registry_service", "sessions",
+                   "replays", "replayer_stats", "metrics", "schedulers"),
+             "report")
+    if rep["net"] is not None:
+        _require(rep["net"], NET_KEYS, "report.net")
+    for i, s in enumerate(rep["sessions"]):
+        _require(s, SESSION_KEYS, f"report.sessions[{i}]")
+    for i, r in enumerate(rep["replays"]):
+        _require(r, REPLAY_KEYS, f"report.replays[{i}]")
+    _require(rep["metrics"], ("counters", "histograms"), "report.metrics")
+    for k, h in rep["metrics"]["histograms"].items():
+        check_histogram_summary(h, f"report.metrics.histograms[{k}]")
+    for i, s in enumerate(rep["schedulers"]):
+        check_scheduler_stats(s, f"report.schedulers[{i}]")
+    return rep
+
+
+# ------------------------------------------------------- bench artifacts --
+def _check_multitenant(d: dict) -> None:
+    _require(d, ("archs", "solo", "multi", "frontier", "scheduler",
+                 "bit_exact_vs_solo", "frontier_only_syncs"), "multitenant")
+    for section in ("solo", "multi"):
+        for row in d[section]:
+            _require(row, ("stream", "tokens", "host_syncs",
+                           "syncs_per_token", "latency_quantiles"),
+                     f"multitenant.{section}[{row.get('stream')}]")
+            _require(row["latency_quantiles"], QUANTILE_KEYS,
+                     f"multitenant.{section}[{row.get('stream')}]"
+                     ".latency_quantiles")
+    check_scheduler_stats(d["scheduler"], "multitenant.scheduler")
+    _flags(d, ("bit_exact_vs_solo", "frontier_only_syncs"), "multitenant")
+
+
+def _check_recording(d: dict) -> None:
+    _require(d, ("rows", "wifi_virtual_times_s", "trace_attribution"),
+             "recording")
+    for row in d["rows"]:
+        _require(row, ("stack", "net", "virtual_time_s", "blocking_rts",
+                       "trace_attribution"), f"recording[{row.get('stack')}]")
+    _flags(d, ("monotone_virtual_time", "all_passes_ge_90pct_below_naive",
+               "bit_exact_vs_legacy", "verifies_under_key",
+               "trace_attributed_ge_95pct"), "recording")
+
+
+def _check_replay(d: dict) -> None:
+    _require(d, ("native_rows", "ablation"), "replay")
+    _flags(d, ("replay_not_slower_than_native", "monotone_virtual_time",
+               "bit_exact_vs_naive_replay", "bit_exact_vs_live"), "replay")
+
+
+def _check_registry(d: dict) -> None:
+    _require(d, ("rows", "record_virtual_s", "delta_publish_wire_bytes"),
+             "registry")
+    _flags(d, ("warm_zero_recording_rts", "warm_reduction_ge_80pct",
+               "delta_wire_lt_full"), "registry")
+
+
+def _check_decode(d: dict) -> None:
+    _require(d, ("depths", "replay_vs_live"), "decode")
+    _flags(d, ("identical_streams_across_depths",), "decode")
+
+
+def _check_trace(d: dict) -> None:
+    _require(d, ("traceEvents",), "trace")
+    if not isinstance(d["traceEvents"], list) or not d["traceEvents"]:
+        raise SchemaError("trace: traceEvents must be a non-empty list")
+
+
+BENCH_CHECKS = {
+    "BENCH_multitenant.json": _check_multitenant,
+    "BENCH_recording.json": _check_recording,
+    "BENCH_replay.json": _check_replay,
+    "BENCH_registry.json": _check_registry,
+    "BENCH_decode.json": _check_decode,
+}
+
+
+def check_bench_file(path: str) -> str:
+    base = os.path.basename(path)
+    with open(path) as f:
+        data = json.load(f)
+    if base in BENCH_CHECKS:
+        BENCH_CHECKS[base](data)
+        return f"schema ok: {base}"
+    if base.startswith("TRACE"):
+        _check_trace(data)
+        return f"schema ok: {base} ({len(data['traceEvents'])} events)"
+    raise SchemaError(f"no schema registered for {base}")
+
+
+def main(argv=None) -> int:
+    paths = list(sys.argv[1:] if argv is None else argv)
+    if not paths:
+        print("usage: python -m repro.obs.schema BENCH_*.json TRACE_*.json")
+        return 2
+    for p in paths:
+        print(check_bench_file(p))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
+
+
+__all__ = ["SchemaError", "check_workspace_report", "check_bench_file",
+           "check_histogram_summary", "check_scheduler_stats", "main"]

@@ -34,6 +34,7 @@ from repro.core.netem import NetProfile, NetworkEmulator
 from repro.core.recording import Recording
 from repro.core.speculation import (HistorySpeculator, MispredictError,
                                     SpeculativeRunner)
+from repro.obs.trace import NULL, traced
 from repro.record.cloud import CloudDryrun
 from repro.record.device import POLL_TRIPS, DeviceProxy
 
@@ -98,6 +99,10 @@ class LinkLayer:
         return self.inner.sync_state(state)
 
     # -- accounting helpers --
+    @property
+    def tracer(self):
+        return self.s.tracer
+
     def _span(self):
         return self.s.netem.checkpoint() if self.s.netem else None
 
@@ -129,9 +134,11 @@ class WireLink(LinkLayer):
             return None
         if kind == "poll":
             sym = None
-            for _ in range(POLL_TRIPS):       # unoffloaded: spin over RTTs
-                sym = q.read(site)
-                self.root.commit_now()
+            with traced(self.tracer, "wire.poll_spin", "record",
+                        site=site, trips=POLL_TRIPS):
+                for _ in range(POLL_TRIPS):   # unoffloaded: spin over RTTs
+                    sym = q.read(site)
+                    self.root.commit_now()
             self._absorb(mark)
             return sym
         sym = q.read(site)
@@ -150,8 +157,9 @@ class WireLink(LinkLayer):
         mark = self._span()
         wire = full_pack(state)               # naive MemSync: everything
         self.acct["sync_bytes"] += len(wire)
-        self.s.ship_sync(len(wire))
-        self.s.device.apply_full_sync(state)
+        with traced(self.tracer, "wire.sync", "record", bytes=len(wire)):
+            self.s.ship_sync(len(wire))
+            self.s.device.apply_full_sync(state)
         self._absorb(mark)
 
 
@@ -175,14 +183,18 @@ class DeferralPass(LinkLayer):
         if cdep:                              # driver branches on this read
             self.acct["cdep_commits"] += 1
             mark = self._span()
-            self.root.commit_now()
+            with traced(self.tracer, "deferral.cdep_commit", "record",
+                        site=site, batch=len(q.queue)):
+                self.root.commit_now()
             self._absorb(mark)
         return sym
 
     def barrier(self):
         if self.s.q.queue:
             self.acct["barrier_commits"] += 1
-            self.root.commit_now()
+            with traced(self.tracer, "deferral.barrier_commit", "record",
+                        batch=len(self.s.q.queue)):
+                self.root.commit_now()
         self.inner.barrier()
 
 
@@ -229,6 +241,9 @@ class SpeculationPass(LinkLayer):
         went_async = self.runner.commit_speculative()
         self.acct["spec_commits" if went_async else "sync_commits"] += 1
         self._absorb(mark)
+        if self.tracer:
+            self.tracer.instant("spec.ship", "record",
+                                mode="async" if went_async else "sync")
         if len(self.runner.outstanding) >= self.FRONTIER:
             self._validate()
 
@@ -237,21 +252,26 @@ class SpeculationPass(LinkLayer):
         self._validate()                      # then settle speculation
 
     def _validate(self):
-        try:
-            self.runner.sync()
-        except MispredictError:
-            # rollback-via-replay: both sides restart from the last
-            # validated snapshot and fast-forward the log locally — no
-            # network traffic, but real recovery time scaling with the
-            # REPLAY DISTANCE (ops since the last validation), not the
-            # whole session log (§7.3)
-            self.acct["mispredicts"] += 1
-            if self.s.netem is not None:
-                replay_ops = len(self.s.q.log) - self._validated_log_len
-                penalty = self.ROLLBACK_BASE_S + \
-                    self.ROLLBACK_PER_OP_S * replay_ops
-                self.acct["rollback_s"] += penalty
-                self.s.netem.virtual_time_s += penalty
+        with traced(self.tracer, "spec.validate", "record",
+                    outstanding=len(self.runner.outstanding)):
+            try:
+                self.runner.sync()
+            except MispredictError:
+                # rollback-via-replay: both sides restart from the last
+                # validated snapshot and fast-forward the log locally — no
+                # network traffic, but real recovery time scaling with the
+                # REPLAY DISTANCE (ops since the last validation), not the
+                # whole session log (§7.3)
+                self.acct["mispredicts"] += 1
+                if self.s.netem is not None:
+                    replay_ops = len(self.s.q.log) - self._validated_log_len
+                    penalty = self.ROLLBACK_BASE_S + \
+                        self.ROLLBACK_PER_OP_S * replay_ops
+                    self.acct["rollback_s"] += penalty
+                    with traced(self.tracer, "spec.rollback", "record",
+                                replay_ops=replay_ops,
+                                penalty_s=round(penalty, 6)):
+                        self.s.netem.virtual_time_s += penalty
         self._validated_log_len = len(self.s.q.log)
 
 
@@ -272,8 +292,9 @@ class MetasyncPass(LinkLayer):
         wire = self.ds.pack(meta)
         self.acct["sync_bytes"] += len(wire)
         self.acct["leaves_skipped"] = self.ds.stats["leaves_skipped"]
-        self.s.ship_sync(len(wire))
-        self.s.device.apply_meta_sync(wire)
+        with traced(self.tracer, "metasync.sync", "record", bytes=len(wire)):
+            self.s.ship_sync(len(wire))
+            self.s.device.apply_meta_sync(wire)
         self._absorb(mark)
 
 
@@ -289,10 +310,12 @@ class RecordingSession:
     def __init__(self, device: Optional[DeviceProxy] = None,
                  cloud: Optional[CloudDryrun] = None,
                  netem: Optional[NetworkEmulator] = None,
-                 passes: Union[str, Sequence[str], None] = "all"):
+                 passes: Union[str, Sequence[str], None] = "all",
+                 tracer=NULL):
         self.device = device if device is not None else DeviceProxy()
         self.cloud = cloud if cloud is not None else CloudDryrun()
         self.netem = netem
+        self.tracer = tracer if tracer is not None else NULL
         self.pass_names = resolve_passes(passes)
         self.q = CommitQueue(self.device.channel, netem=self.netem,
                              name="record-session")
@@ -362,14 +385,20 @@ class RecordingSession:
         self._exercised = True
         mark = self.netem.checkpoint() if self.netem else None
         root = self.root
-        for seg, ops in self.cloud.interaction_plan(rec):
-            for kind, site, payload, cdep in ops:
-                root.op(kind, site, payload, cdep)
-            if seg.startswith("job"):
-                root.barrier()                # job end = externalization
-                root.sync_state(self.cloud.job_state(rec, int(seg[3:])))
-                self.jobs += 1
-        root.barrier()
+        tr = self.tracer
+        with tr.clock_scope(self.netem):
+            for seg, ops in self.cloud.interaction_plan(rec):
+                with traced(tr, f"record.{seg}", "record",
+                            ops=len(ops), passes=",".join(self.pass_names)):
+                    for kind, site, payload, cdep in ops:
+                        root.op(kind, site, payload, cdep)
+                    if seg.startswith("job"):
+                        root.barrier()        # job end = externalization
+                        root.sync_state(
+                            self.cloud.job_state(rec, int(seg[3:])))
+                        self.jobs += 1
+            with traced(tr, "record.final_barrier", "record"):
+                root.barrier()
         if mark is not None:
             self._totals = self.netem.delta(mark)
 

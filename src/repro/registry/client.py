@@ -27,6 +27,7 @@ import collections
 from typing import Callable, Dict, Iterable, List, Optional, Tuple, Union
 
 from repro.core.recording import Recording
+from repro.obs.trace import NULL, traced
 from repro.registry.service import RegistryService, parts_to_recording_bytes
 from repro.registry.store import LRUBytes, RegistryMissError
 
@@ -42,13 +43,14 @@ class FetchInterrupted(RuntimeError):
 
 class RegistryClient:
     def __init__(self, service: RegistryService, netem=None, *, key: bytes,
-                 cache_bytes: int = 32 << 20):
+                 cache_bytes: int = 32 << 20, tracer=None):
         if not key:
             raise ValueError("RegistryClient requires the registry signing "
                              "key: fetched bytes are verified before use")
         self._svc = service
         self._net = netem
         self._key = key
+        self.tracer = tracer if tracer is not None else NULL
         self.chunks = LRUBytes(cache_bytes)   # digest -> raw chunk
         self.stats = collections.Counter()
 
@@ -81,10 +83,13 @@ class RegistryClient:
         out: Dict[str, bytes] = {}
         if not chunk_rows:
             return out
-        if self._net is not None:
-            self._net.transfer(sum(c["c"] for c in chunk_rows),
-                               chunk_size=self._svc.chunk_size,
-                               direction="recv")
+        with traced(self.tracer, "registry.download", "registry",
+                    chunks=len(chunk_rows),
+                    bytes=sum(c["c"] for c in chunk_rows), kind=stat_key):
+            if self._net is not None:
+                self._net.transfer(sum(c["c"] for c in chunk_rows),
+                                   chunk_size=self._svc.chunk_size,
+                                   direction="recv")
         for c in chunk_rows:
             raw = self._svc.read_chunk(c["d"])
             if cache:
@@ -105,10 +110,18 @@ class RegistryClient:
         side).  ``interrupt_after=k`` aborts after k newly received chunks
         with ``FetchInterrupted`` — the test/demo hook for resumability.
         """
+        with self.tracer.clock_scope(self._net), \
+                traced(self.tracer, "registry.fetch", "registry", key=key):
+            return self._fetch(key, record_fn, interrupt_after)
+
+    def _fetch(self, key, record_fn, interrupt_after) -> bytes:
+        tr = self.tracer
         if not self._svc.has(key):
             if record_fn is None:
                 self._bill_index_rpc(0)
                 raise RegistryMissError(key)
+            if tr:
+                tr.instant("registry.miss", "registry", key=key)
             # blocking record-on-miss RPC: the client stalls for the
             # cloud's record (or for another client's in-flight lease);
             # ensure() publishes without reassembling — the chunks cross
@@ -122,13 +135,17 @@ class RegistryClient:
                 # time PLUS the distributed record session's virtual time
                 # (the device<->cloud protocol round trips; zero when the
                 # recording was made by a local in-process session)
-                self._net.virtual_time_s += \
-                    float(entry["meta"].get("record_wall_s", 0.0)) + \
-                    float(entry["meta"].get("record_virtual_s", 0.0))
+                with traced(tr, "registry.record_on_miss", "registry",
+                            key=key):
+                    self._net.virtual_time_s += \
+                        float(entry["meta"].get("record_wall_s", 0.0)) + \
+                        float(entry["meta"].get("record_virtual_s", 0.0))
         else:
             entry = self._svc.entry(key)
             self._bill_index_rpc(len(entry["chunks"]))
             self.stats["registry_hits"] += 1
+            if tr:
+                tr.instant("registry.hit", "registry", key=key)
 
         missing = self._missing_rows(entry)
         if interrupt_after is not None and len(missing) > interrupt_after:
@@ -161,6 +178,9 @@ class RegistryClient:
         # HMAC verification BEFORE the blob can reach pickle.loads anywhere
         Recording.from_bytes(blob, self._key)
         self.stats["verified_fetches"] += 1
+        if self.tracer:
+            self.tracer.instant("registry.verified", "registry", key=key,
+                                bytes=len(blob))
         return blob
 
     def into_channel(self, replayer, prefill_item, decode_item,

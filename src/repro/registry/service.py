@@ -28,6 +28,7 @@ import numpy as np
 from repro.core.attest import TamperedRecordingError, verify
 from repro.core.metasync import DeltaSync
 from repro.core.recording import Recording
+from repro.obs.trace import NULL, traced
 from repro.registry.store import (RecordingStore, RegistryMissError,
                                   split_chunks)
 
@@ -75,11 +76,12 @@ class RegistryService:
     """
 
     def __init__(self, store: RecordingStore, *, signing_key: bytes,
-                 record_profile=None, record_passes="all"):
+                 record_profile=None, record_passes="all", tracer=None):
         self._store = store
         self._key = signing_key
         self._record_profile = record_profile
         self._record_passes = record_passes
+        self.tracer = tracer if tracer is not None else NULL
         self._delta: Dict[str, DeltaSync] = {}
         self._lock = threading.Lock()
         self._leases: Dict[str, threading.Event] = {}
@@ -100,10 +102,14 @@ class RegistryService:
         from repro.record import RecordingSession
         if self._record_profile is not None:
             session = RecordingSession.for_profile(
-                self._record_profile, passes=self._record_passes)
+                self._record_profile, passes=self._record_passes,
+                tracer=self.tracer)
         else:
-            session = RecordingSession.local(passes=self._record_passes)
-        rec = record_fn(session=session)
+            session = RecordingSession.local(passes=self._record_passes,
+                                             tracer=self.tracer)
+        with traced(self.tracer, "registry.record_session", "registry",
+                    passes=str(self._record_passes)):
+            rec = record_fn(session=session)
         self.stats["record_virtual_s"] += \
             session.report()["virtual_time_s"]
         return rec
@@ -124,8 +130,9 @@ class RegistryService:
         parts = recording_to_parts(rec, self._store.chunk_size)
         ds = self._delta.setdefault(key, DeltaSync())
         sent_before = ds.stats["leaves_sent"]
-        wire = ds.pack({p: np.frombuffer(b, np.uint8) for p, b in
-                        parts.items()})
+        with traced(self.tracer, "registry.publish", "registry", key=key):
+            wire = ds.pack({p: np.frombuffer(b, np.uint8) for p, b in
+                            parts.items()})
         entry = self._store.put(key, parts, meta={
             "name": rec.manifest.get("name", key),
             "static": rec.manifest.get("static", {}),
@@ -173,6 +180,9 @@ class RegistryService:
                 owner = False
         if not owner:
             self.stats["lease_waits"] += 1
+            if self.tracer:
+                self.tracer.instant("registry.lease_wait", "registry",
+                                    key=key)
             lease.wait()
             if not self._store.has(key):
                 raise RegistryMissError(

@@ -52,14 +52,15 @@ class Engine:
                  pipeline_depth: int = 4, batched_prefill_fn=None,
                  prefill_buckets: Sequence[int] = (8, 16, 32, 64, 128),
                  channel: Optional[ExecutionChannel] = None,
-                 stream_name: str = "stream0"):
+                 stream_name: str = "stream0", tracer=None, metrics=None):
         if channel is None:
             if prefill_fn is None or fused_decode_fn is None:
                 raise ValueError("Engine needs either channel= or both "
                                  "prefill_fn and fused_decode_fn")
             channel = LiveChannel(prefill_fn, fused_decode_fn,
                                   batched_prefill_fn)
-        self.scheduler = Scheduler(netem=netem, spec_k=spec_k)
+        self.scheduler = Scheduler(netem=netem, spec_k=spec_k,
+                                   tracer=tracer, metrics=metrics)
         self.stream = self.scheduler.add_stream(
             stream_name, channel, params, n_slots=n_slots,
             cache_len=cache_len, block_k=block_k, eos_id=eos_id,
@@ -79,6 +80,10 @@ class Engine:
     @property
     def stats(self):
         return self.stream.stats
+
+    @property
+    def metrics(self):
+        return self.scheduler.metrics
 
     @property
     def spec(self):

@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core.channel import ExecutionChannel
 from repro.core.deferral import CommitQueue, Op
+from repro.obs.trace import NULL, traced
 from repro.serving.cache import SlotTable
 from repro.serving.frontier import ALL_RUNNING, SOME_DONE, CommitFrontier
 
@@ -75,10 +76,13 @@ class StreamExecutor:
                  init_caches_fn=None, cache_batch_axes=None, netem=None,
                  speculate: bool = True, pipeline_depth: int = 4,
                  prefill_buckets: Sequence[int] = (8, 16, 32, 64, 128),
-                 admission_gate=None):
+                 admission_gate=None, tracer=None, metrics=None):
         self.name = name
         self.channel = channel
         self.params = params
+        self.tracer = tracer if tracer is not None else NULL
+        self.metrics = metrics
+        self.track = f"serve.{name}"
         self.block_k = block_k
         self.cache_len = cache_len
         self.eos_id = eos_id
@@ -238,14 +242,16 @@ class StreamExecutor:
             prefix = req.prefix()
             toks[row, :len(prefix)] = prefix
             lens[row] = len(prefix)
-        out, caches = self.channel.batched_prefill(
-            self.params, jnp.asarray(toks), jnp.asarray(lens))
-        firsts = np.asarray(out["next_tokens"])
-        for row, (req, slot) in enumerate(members):
-            self._seed_slot(req, slot, int(firsts[row]))
-        self._scatter_caches(caches, np.array([s for _, s in members]))
-        if self.netem is not None:
-            self.netem.round_trip()    # ONE synchronous commit per bucket
+        with traced(self.tracer, "prefill.dispatch", self.track,
+                    padded_len=padded_len, requests=len(members)):
+            out, caches = self.channel.batched_prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(lens))
+            firsts = np.asarray(out["next_tokens"])
+            for row, (req, slot) in enumerate(members):
+                self._seed_slot(req, slot, int(firsts[row]))
+            self._scatter_caches(caches, np.array([s for _, s in members]))
+            if self.netem is not None:
+                self.netem.round_trip()  # ONE synchronous commit per bucket
         self.stats["prefill_dispatches"] += 1
 
     def _scatter_caches(self, new_caches, slots_arr: np.ndarray):
@@ -264,12 +270,15 @@ class StreamExecutor:
     def _prefill_into_slot(self, req: Request, slot: int):
         """Per-request path: exact shapes (required for recorded prefill
         executables and for recurrent-state families)."""
-        batch = {"tokens": jnp.asarray([req.prefix()], jnp.int32)}
-        out, caches = self.channel.prefill(self.params, batch)
-        self._seed_slot(req, slot, int(np.asarray(out["next_tokens"])[0]))
-        self._scatter_caches(caches, np.array([slot]))
-        if self.netem is not None:
-            self.netem.round_trip()     # prefill is a synchronous commit
+        with traced(self.tracer, "prefill.dispatch", self.track,
+                    rid=req.rid, prefix_len=len(req.prefix())):
+            batch = {"tokens": jnp.asarray([req.prefix()], jnp.int32)}
+            out, caches = self.channel.prefill(self.params, batch)
+            self._seed_slot(req, slot,
+                            int(np.asarray(out["next_tokens"])[0]))
+            self._scatter_caches(caches, np.array([slot]))
+            if self.netem is not None:
+                self.netem.round_trip()  # prefill is a synchronous commit
         self.stats["prefill_dispatches"] += 1
 
     # ------------------------------------------------------------- decode --
@@ -293,15 +302,19 @@ class StreamExecutor:
         if pred is not None:
             # speculative continuation: ship without blocking; token tails
             # are applied (and validated) only at the commit frontier
-            self.queue.commit_async()
+            with traced(self.tracer, "decode.block", self.track,
+                        mode="spec", active=active):
+                self.queue.commit_async()
             self.inflight.append({"ops": ops, "out": self._last_block_out,
                                   "pred": pred})
             self.stats["spec_blocks"] += 1
         else:
             if self.inflight:
                 self.frontier.drain(self)  # program order: drain, then block
-            self.queue.commit()
-            actual = self.frontier.read_now(self, self._last_block_out)
+            with traced(self.tracer, "decode.block", self.track,
+                        mode="sync", active=active):
+                self.queue.commit()
+                actual = self.frontier.read_now(self, self._last_block_out)
             self.apply_block(actual, speculative=False)
             self.spec.record(
                 ops, SOME_DONE if actual[1].any() else ALL_RUNNING,
@@ -375,6 +388,18 @@ class StreamExecutor:
             self.slots.release(i)
             self.reset_device_chain()          # slot table changed
             self.stats["retired"] += 1
+            if self.metrics is not None:
+                self.metrics.histogram(
+                    "request_latency_s", stream=self.name).observe(
+                        req.finish_t - req.submit_t)
+                self.metrics.counter(
+                    "requests_retired", stream=self.name).inc()
+                self.metrics.counter(
+                    "tokens_generated", stream=self.name).inc(
+                        len(req.generated))
+            if self.tracer:
+                self.tracer.instant("request.done", self.track, rid=req.rid,
+                                    tokens=len(req.generated))
 
     def outputs(self) -> Dict[int, List[int]]:
         return {rid: r.generated for rid, r in self.requests.items()}

@@ -19,6 +19,8 @@ import collections
 
 import numpy as np
 
+from repro.obs.trace import NULL, traced
+
 ALL_RUNNING = ("all_running",)
 SOME_DONE = ("some_done",)
 
@@ -28,6 +30,7 @@ class CommitFrontier:
 
     def __init__(self):
         self.stats = collections.Counter()
+        self.tracer = NULL      # set by the Scheduler when tracing is on
 
     # ---------------------------------------------------------- readback --
     @staticmethod
@@ -42,6 +45,9 @@ class CommitFrontier:
         non-speculative fallback path)."""
         stream.stats["host_syncs"] += 1
         self.stats["host_syncs"] += 1
+        if self.tracer:
+            self.tracer.instant("host_sync", f"serve.{stream.name}",
+                                kind="read_now")
         return self.materialize(out)
 
     # ------------------------------------------------------------- drain --
@@ -55,31 +61,43 @@ class CommitFrontier:
             stream.stats["host_syncs"] += 1    # one stall for the drain
             self.stats["host_syncs"] += 1
             self.stats["drains"] += 1
-            if stream.netem is not None:
-                # the paper's metastate-only sync: done masks + token tails
-                n, k = stream.slots.n_slots, stream.block_k
-                stream.netem.round_trip(
-                    send_bytes=64,
-                    recv_bytes=len(pipeline) * n * (4 * k + 5))
-            for b_idx, blk in enumerate(pipeline):
-                actual = self.materialize(blk["out"])
-                outcome = SOME_DONE if actual[1].any() else ALL_RUNNING
-                stream.spec.record(blk["ops"], outcome, stream=stream.name)
-                if blk["pred"] != outcome:
-                    stream.stats["mispredicts"] += 1
-                    self.stats["mispredicts"] += 1
-                    stream.apply_block(actual, speculative=False)
+            track = f"serve.{stream.name}"
+            if self.tracer:
+                self.tracer.instant("host_sync", track, kind="drain",
+                                    blocks=len(pipeline))
+            with traced(self.tracer, "frontier.drain", track,
+                        blocks=len(pipeline)):
+                if stream.netem is not None:
+                    # the paper's metastate-only sync: done masks + token
+                    # tails
+                    n, k = stream.slots.n_slots, stream.block_k
+                    stream.netem.round_trip(
+                        send_bytes=64,
+                        recv_bytes=len(pipeline) * n * (4 * k + 5))
+                for b_idx, blk in enumerate(pipeline):
+                    actual = self.materialize(blk["out"])
+                    outcome = SOME_DONE if actual[1].any() else ALL_RUNNING
+                    stream.spec.record(blk["ops"], outcome,
+                                       stream=stream.name)
+                    if blk["pred"] != outcome:
+                        stream.stats["mispredicts"] += 1
+                        self.stats["mispredicts"] += 1
+                        if self.tracer:
+                            self.tracer.instant(
+                                "frontier.mispredict", track,
+                                dropped=len(pipeline) - b_idx - 1)
+                        stream.apply_block(actual, speculative=False)
+                        stream.retire(actual)
+                        stream.reset_device_chain()  # chain built on a lie
+                        dropped = len(pipeline) - b_idx - 1
+                        stream.stats["dropped_blocks"] += dropped
+                        ok = False
+                        break
+                    stream.apply_block(
+                        actual, speculative=outcome == ALL_RUNNING)
                     stream.retire(actual)
-                    stream.reset_device_chain()    # chain built on a lie
-                    dropped = len(pipeline) - b_idx - 1
-                    stream.stats["dropped_blocks"] += dropped
-                    ok = False
-                    break
-                stream.apply_block(
-                    actual, speculative=outcome == ALL_RUNNING)
-                stream.retire(actual)
-                stream.stats["validated_blocks"] += 1
-                self.stats["validated_blocks"] += 1
+                    stream.stats["validated_blocks"] += 1
+                    self.stats["validated_blocks"] += 1
         # frontier clean: commit generated tails
         for req in stream.requests.values():
             req.committed = len(req.generated)

@@ -31,6 +31,8 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.core.channel import ExecutionChannel
 from repro.core.speculation import HistorySpeculator
+from repro.obs.metrics import Metrics
+from repro.obs.trace import NULL
 from repro.serving.executor import (PreemptionUnsupportedError,
                                     StreamExecutor)
 from repro.serving.frontier import CommitFrontier
@@ -43,16 +45,21 @@ class UnknownStreamError(KeyError):
 class Scheduler:
     def __init__(self, *, netem=None, spec_k: int = 3,
                  max_live_slots: Optional[int] = None,
-                 stall_limit: Optional[int] = None):
+                 stall_limit: Optional[int] = None,
+                 tracer=None, metrics: Optional[Metrics] = None):
         self.netem = netem
+        self.tracer = tracer if tracer is not None else NULL
+        self.metrics = metrics if metrics is not None else Metrics()
         self.frontier = CommitFrontier()
+        self.frontier.tracer = self.tracer
         self.spec = HistorySpeculator(k=spec_k)
         self.streams: Dict[str, StreamExecutor] = {}
         self.max_live_slots = max_live_slots
         self.stall_limit = stall_limit
-        self.stats = collections.Counter()
+        self.counters = collections.Counter()
         self._progress: Dict[str, tuple] = {}  # slot marker at last drain
         self._stalled: Dict[str, int] = {}     # consecutive no-progress drains
+        self._stall_hwm: Dict[str, int] = {}   # worst stall streak per stream
         self._blocks_since_drain: Dict[str, int] = {}
         self._unevictable: set = set()         # auto-eviction failed once
 
@@ -73,10 +80,12 @@ class Scheduler:
             cache_batch_axes=cache_batch_axes, netem=self.netem,
             speculate=speculate, pipeline_depth=pipeline_depth,
             prefill_buckets=prefill_buckets,
-            admission_gate=self._may_admit)
+            admission_gate=self._may_admit,
+            tracer=self.tracer, metrics=self.metrics)
         self.streams[name] = ex
         self._progress[name] = ex.progress_marker()
         self._stalled[name] = 0
+        self._stall_hwm[name] = 0
         self._blocks_since_drain[name] = 0
         return ex
 
@@ -136,6 +145,8 @@ class Scheduler:
             self._stalled[name] = 0
         else:
             self._stalled[name] += 1
+            if self._stalled[name] > self._stall_hwm[name]:
+                self._stall_hwm[name] = self._stalled[name]
         self._progress[name] = marker
         if self.stall_limit is not None and \
                 self._stalled[name] >= self.stall_limit and \
@@ -148,7 +159,10 @@ class Scheduler:
                 # evicted prefixes — leave it in place rather than abort
                 # serving for every healthy tenant; never retry
                 self._unevictable.add(name)
-                self.stats["eviction_unsupported"] += 1
+                self.counters["eviction_unsupported"] += 1
+                if self.tracer:
+                    self.tracer.instant("sched.eviction_unsupported", "sched",
+                                        stream=name)
 
     def preempt(self, name: str) -> List[int]:
         """Evict a stream's active requests back to its pending queue; the
@@ -157,8 +171,11 @@ class Scheduler:
         ex = self.stream(name)
         evicted = ex.preempt()
         if evicted:
-            self.stats["preemptions"] += 1
+            self.counters["preemptions"] += 1
             self._stalled[name] = 0
+            if self.tracer:
+                self.tracer.instant("sched.preempt", "sched", stream=name,
+                                    evicted=len(evicted))
         return evicted
 
     # ---------------------------------------------------------------- run --
@@ -175,8 +192,32 @@ class Scheduler:
             self._blocks_since_drain[name] = 0
         return {name: ex.outputs() for name, ex in self.streams.items()}
 
+    # ---------------------------------------------------------- reporting --
+    def stats(self) -> dict:
+        """Public scheduler stats: preempt/evict counts plus the per-stream
+        stall state the preemption policy runs on — the stall high-water
+        mark answers "how close did this tenant come to eviction".  Shape
+        is pinned by ``repro.obs.schema.check_scheduler_stats``."""
+        return {
+            "preemptions": int(self.counters["preemptions"]),
+            "eviction_unsupported": int(self.counters["eviction_unsupported"]),
+            "live_slots": self.live_slots(),
+            "max_live_slots": self.max_live_slots,
+            "stall_limit": self.stall_limit,
+            "streams": {
+                name: {
+                    "stalled": int(self._stalled[name]),
+                    "stall_hwm": int(self._stall_hwm[name]),
+                    "unevictable": name in self._unevictable,
+                    "evicted_requests": int(ex.stats["evicted_requests"]),
+                    "admissions_deferred":
+                        int(ex.stats["admissions_deferred"]),
+                } for name, ex in self.streams.items()
+            },
+        }
+
     def aggregate_stats(self) -> collections.Counter:
-        total = collections.Counter(self.stats)
+        total = collections.Counter(self.counters)
         for name, ex in self.streams.items():
             for k, v in ex.stats.items():
                 total[f"{name}.{k}"] = v

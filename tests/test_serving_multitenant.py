@@ -171,7 +171,7 @@ def test_preempt_resume_bit_exact():
     evicted = sched.preempt("s")
     assert evicted                      # something was actually running
     assert sched.streams["s"].slots.done.all()
-    assert sched.stats["preemptions"] == 1
+    assert sched.stats()["preemptions"] == 1
     outs = sched.run()
     assert outs["s"] == reference
 
@@ -205,8 +205,14 @@ def test_stalled_stream_evicted_healthy_stream_unaffected():
     for p in _prompts(frozen[0], 2, 62):
         sched.submit("frozen", p, 200)
     outs = sched.run(max_blocks=40)
-    assert sched.stats["preemptions"] >= 1
+    stats = sched.stats()
+    assert stats["preemptions"] >= 1
     assert sched.streams["frozen"].stats["evicted_requests"] >= 1
+    # the public stats() surfaces the stall state the eviction ran on:
+    # the frozen stream's stall streak reached the limit at least once
+    assert stats["streams"]["frozen"]["stall_hwm"] >= 2
+    assert stats["streams"]["frozen"]["evicted_requests"] >= 1
+    assert stats["streams"]["healthy"]["stall_hwm"] == 0
     assert outs["healthy"] == solo                  # isolation held
     assert all(r.done for r in sched.streams["healthy"].requests.values())
     # the frozen stream never legitimately finished a request
@@ -254,8 +260,10 @@ def test_stalled_pinned_channel_does_not_crash_scheduler():
     for _ in range(2):
         sched.submit("pinned", list(range(3, 11)), 200)
     outs = sched.run(max_blocks=40)         # must not raise
-    assert sched.stats["eviction_unsupported"] == 1
-    assert sched.stats["preemptions"] == 0
+    stats = sched.stats()
+    assert stats["eviction_unsupported"] == 1
+    assert stats["preemptions"] == 0
+    assert stats["streams"]["pinned"]["unevictable"] is True
     assert outs["healthy"] == solo
 
 
