@@ -55,6 +55,16 @@ def _decode_pipeline_section(quick: bool):
               f"rts={r['blocking_round_trips']}")
 
 
+def _fleet_section(quick: bool):
+    _section("Fleet: replica pool + placement policies under open-loop "
+             "traffic (-> BENCH_fleet.json)")
+    from benchmarks import fleet_bench
+    for r in fleet_bench.main(quick=quick):
+        print(f"fleet_{r['policy']}_{r['tenant']},{r['p50']*1e6:.0f},"
+              f"served={r['served']};p99={r['p99']};p999={r['p999']};"
+              f"bit_exact={r['bit_exact']}")
+
+
 def _replay_section(quick: bool):
     _section("Replay vs native + replay-plan compaction ablation "
              "(-> BENCH_replay.json)")
@@ -81,10 +91,10 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: decode pipeline + multitenant + registry "
-                         "+ recording-ablation + replay benches only, emit "
-                         "BENCH_decode.json + BENCH_multitenant.json + "
+                         "+ recording-ablation + replay + fleet benches only, "
+                         "emit BENCH_decode.json + BENCH_multitenant.json + "
                          "BENCH_registry.json + BENCH_recording.json + "
-                         "BENCH_replay.json")
+                         "BENCH_replay.json + BENCH_fleet.json")
     args = ap.parse_args()
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -95,6 +105,7 @@ def main() -> None:
         _registry_section(quick=True)
         _recording_ablation_section(quick=True)
         _replay_section(quick=True)
+        _fleet_section(quick=True)
         print(f"\n# total bench wall time: {time.time()-t0:.1f}s")
         return
 
@@ -103,6 +114,7 @@ def main() -> None:
     _registry_section(quick=args.quick)
     _recording_ablation_section(quick=args.quick)
     _replay_section(quick=args.quick)
+    _fleet_section(quick=args.quick)
 
     _section("Paper Fig.7 + Table 1: recording delays (emulated networks)")
     from benchmarks import record_replay

@@ -294,12 +294,18 @@ class Workload:
                 and meta.get("config_fingerprint", "") == self.config_fp
                 and meta.get("topology", "") == topo)
 
-    def _registry_channel(self, record_on_miss: bool) -> ReplayChannel:
+    def _registry_channel(self, record_on_miss: bool,
+                          client=None) -> ReplayChannel:
         """Boot a ReplayChannel from the workspace registry: fetch-by-key
         (chunked, resumable, netem-billed), verify, preload + warm — a
         replica boots from a registry hit without recompiling.  On miss,
         an alternate published shape is substituted when usable, else
-        ``record_on_miss`` records through the single-flight lease."""
+        ``record_on_miss`` records through the single-flight lease.
+
+        ``client`` selects WHICH RegistryClient boots the channel: fleet
+        replicas pass their own (own netem span, own stats, possibly a
+        regional read-replica) so boot billing never aliases onto the
+        workspace's shared client; None keeps the shared one."""
         store, service = self.ws.store, self.ws.service
         topo = topology_fingerprint()
         items = []
@@ -322,7 +328,9 @@ class Workload:
             items.append((reg_key, record_fn))
         rp = Replayer(key=self.ws.key)
         self.replayers.append(rp)
-        return self.ws.client.into_channel(rp, items[0], items[1], warm=True)
+        if client is None:
+            client = self.ws.client
+        return client.into_channel(rp, items[0], items[1], warm=True)
 
     def _live_channel(self) -> LiveChannel:
         """Live-jit transport, memoized: every engine/scheduler built
@@ -347,18 +355,24 @@ class Workload:
 
     def channel(self, *, recordings_dir: str = "",
                 record_on_miss: bool = False,
-                bill_dispatches: bool = False):
+                bill_dispatches: bool = False, client=None):
         """The ExecutionChannel this workload serves through: verified
         registry replay when the workspace has a registry, flat-file
         replay when ``recordings_dir`` is given, live-jit otherwise.
-        ``bill_dispatches`` wraps with the netem-billed transport."""
+        ``bill_dispatches`` wraps with the netem-billed transport;
+        ``client`` boots the registry channel through a specific
+        ``RegistryClient`` (a fleet replica's own) instead of the shared
+        workspace client."""
         if recordings_dir and self.ws.has_registry:
             raise ValueError(
                 "both a workspace registry and recordings_dir were given; "
                 "recordings come from exactly one source — use a registry-"
                 "less Workspace for flat-file replay")
+        if client is not None and not self.ws.has_registry:
+            raise ValueError("channel(client=...) requires a workspace "
+                             "registry: only registry channels fetch")
         if self.ws.has_registry:
-            ch = self._registry_channel(record_on_miss)
+            ch = self._registry_channel(record_on_miss, client=client)
         elif recordings_dir:
             rp = Replayer(key=self.ws.key)
             self.replayers.append(rp)

@@ -17,8 +17,10 @@ from repro.configs import get_config, smoke_shrink
 from repro.core.netem import PROFILES, NetProfile, NetworkEmulator
 from repro.obs.metrics import Metrics
 from repro.obs.trace import NULL, Tracer
+from repro.fleet.pool import Replica, ReplicaPool
 from repro.record import CloudDryrun, RecordingSession
-from repro.registry import RecordingStore, RegistryClient, RegistryService
+from repro.registry import (RecordingStore, RegistryClient,
+                            RegistryReadReplica, RegistryService)
 from repro.serving.scheduler import Scheduler
 
 from repro.api.workload import Workload
@@ -51,7 +53,8 @@ class Workspace:
     def __init__(self, registry: Union[None, str, bool] = None, *,
                  key: bytes = b"", net: _Net = None,
                  record_passes="all", replay_passes="all",
-                 trace: Union[bool, Tracer] = False):
+                 trace: Union[bool, Tracer] = False,
+                 store_cache_bytes: int = 8 << 20):
         if registry is False or registry == "":
             registry = None       # falsy spellings of "no registry"
         if registry is not None and not key:
@@ -66,6 +69,8 @@ class Workspace:
         self.replay_passes = replay_passes
         self.workloads = []
         self.schedulers = []
+        self.fleets = []
+        self.store_cache_bytes = store_cache_bytes
         self.metrics = Metrics()
         # trace=True builds a Tracer on the workspace link's virtual clock
         # (constant 0 base when there is no link — scoped components rebase
@@ -83,6 +88,7 @@ class Workspace:
         self._store: Optional[RecordingStore] = None
         self._service: Optional[RegistryService] = None
         self._client: Optional[RegistryClient] = None
+        self._read_replicas: dict = {}     # region -> RegistryReadReplica
 
     # ------------------------------------------------------------- wiring --
     @property
@@ -107,7 +113,9 @@ class Workspace:
         if self._store is None:
             root = None if self.registry in (True, ":memory:") \
                 else self.registry
-            self._store = RecordingStore(root, key=self.key)
+            self._store = RecordingStore(
+                root, key=self.key, cache_bytes=self.store_cache_bytes,
+                metrics=self.metrics)
         return self._store
 
     @property
@@ -135,14 +143,31 @@ class Workspace:
         callers that only want to read its stats."""
         return self._client
 
-    def new_client(self, netem: Optional[NetworkEmulator] = None
-                   ) -> RegistryClient:
+    def new_client(self, netem: Optional[NetworkEmulator] = None, *,
+                   region: Optional[str] = None) -> RegistryClient:
         """A fresh client against this workspace's service (its own
-        fetch cache; optionally its own emulator)."""
-        return RegistryClient(self.service,
+        fetch cache; optionally its own emulator).  With ``region`` the
+        client reads through that region's read-replica instead of the
+        primary, so its chunk traffic is absorbed by the regional cache.
+
+        Each call returns a FULLY independent client — its own ``stats``
+        counter and its own chunk LRU — so per-replica billing spans
+        never alias (the fleet regression test pins this)."""
+        svc = self.read_replica(region) if region is not None \
+            else self.service
+        return RegistryClient(svc,
                               netem=netem if netem is not None
                               else self.netem, key=self.key,
                               tracer=self.tracer)
+
+    def read_replica(self, region: str) -> RegistryReadReplica:
+        """The (memoized) read-replica for ``region``: a regional chunk
+        cache over the primary service — N replicas booting the same key
+        in one region pull its chunks from the primary once."""
+        if region not in self._read_replicas:
+            self._read_replicas[region] = RegistryReadReplica(
+                self.service, region=region, metrics=self.metrics)
+        return self._read_replicas[region]
 
     # ------------------------------------------------------------- record --
     def session(self, passes=None, jobs: Optional[int] = None
@@ -204,6 +229,68 @@ class Workspace:
             out[wl.cfg.name] = wl
         return sched, out
 
+    def fleet(self, streams, *, replicas: int = 2,
+              policy: str = "round_robin", name: Optional[str] = None,
+              tick_s: float = 0.02, regions: int = 1,
+              record_on_miss: bool = False, pending_limit: int = 8,
+              queue_limit: Optional[int] = None, autoscale: bool = False,
+              queue_high: int = 8, sustain_ticks: int = 5,
+              idle_ticks: int = 50, boot_ticks: int = 10,
+              min_replicas: int = 1, max_replicas: int = 8,
+              seed: int = 0, smoke: bool = True, n_slots: int = 4,
+              cache_len: int = 128, block_k: int = 8, eos_id: int = 2,
+              speculate: bool = True, pipeline_depth: int = 4,
+              validate_every: int = 1, max_ticks: int = 500_000):
+        """Fleet-scale serving: a ``ReplicaPool`` whose replicas each boot
+        warm from the registry on their OWN netem billing span and their
+        own ``RegistryClient`` (no stats aliasing between replicas).  With
+        ``regions > 1`` replica ``idx`` reads through read-replica
+        ``"r{idx % regions}"`` so a popular key fans out CDN-style.
+        ``streams`` entries are arch names or prepared ``Workload``s, as
+        in ``scheduler()``.  Returns ``(pool, {name: workload})``."""
+        workloads = {}
+        for i, s in enumerate(streams):
+            wl = s if isinstance(s, Workload) else self.workload(
+                s, smoke=smoke, batch=n_slots, cache_len=cache_len,
+                block_k=block_k, eos_id=eos_id)
+            workloads[wl.cfg.name] = (i, wl)
+        pool_name = name if name is not None else f"fleet{len(self.fleets)}"
+
+        def factory(idx: int) -> Replica:
+            netem = self.fresh_netem()
+            client = None
+            if self.has_registry:
+                region = f"r{idx % regions}" if regions > 1 else None
+                client = self.new_client(netem=netem, region=region)
+            boot_mark = netem.virtual_time_s if netem is not None else 0.0
+            sched = Scheduler(netem=netem, tracer=self.tracer,
+                              metrics=self.metrics)
+            for tenant, (i, wl) in workloads.items():
+                ch = wl.channel(record_on_miss=record_on_miss,
+                                client=client) if self.has_registry \
+                    else wl.channel()
+                sched.add_stream(
+                    tenant, ch, wl.params(seed + i),
+                    **wl.stream_kwargs(speculate=speculate,
+                                       pipeline_depth=pipeline_depth))
+            boot_s = (netem.virtual_time_s - boot_mark) \
+                if netem is not None else 0.0
+            return Replica(f"{pool_name}-{idx}", sched, netem=netem,
+                           boot_virtual_s=boot_s, region=idx % regions,
+                           pending_limit=pending_limit,
+                           validate_every=validate_every)
+
+        pool = ReplicaPool(
+            factory, replicas=replicas, policy=policy, name=pool_name,
+            tick_s=tick_s, queue_limit=queue_limit, autoscale=autoscale,
+            queue_high=queue_high, sustain_ticks=sustain_ticks,
+            idle_ticks=idle_ticks, boot_ticks=boot_ticks,
+            min_replicas=min_replicas, max_replicas=max_replicas,
+            metrics=self.metrics, labels={"pool": pool_name},
+            max_ticks=max_ticks)
+        self.fleets.append(pool)
+        return pool, {n: wl for n, (_i, wl) in workloads.items()}
+
     # ----------------------------------------------------------- reporting --
     def report(self) -> dict:
         """Aggregate accounting: the link emulator's totals, registry
@@ -227,7 +314,20 @@ class Workspace:
             "replayer_stats": self._replayer_stats(),
             "metrics": self.metrics.snapshot(),
             "schedulers": [s.stats() for s in self.schedulers],
+            "fleet": [p.stats() for p in self.fleets],
+            "registry_store": self._registry_store_stats(),
         }
+
+    def _registry_store_stats(self) -> dict:
+        """Store-level accounting (chunk reads, LRU cache counters) plus
+        each regional read-replica's summary — the satellite observability
+        for CDN-style fan-out."""
+        base = self._store.summary() if self._store is not None else \
+            {"chunk_reads": 0, "puts": 0, "gets": 0, "cache": None}
+        base["read_replicas"] = [
+            self._read_replicas[r].summary()
+            for r in sorted(self._read_replicas)]
+        return base
 
     def _replayer_stats(self) -> dict:
         """Summed Replayer counters across every workload — the serving-

@@ -1,0 +1,14 @@
+"""repro.fleet — fleet-scale replay serving.
+
+A ``ReplicaPool`` of replay replicas (each booted warm from the
+registry) behind an admission-controlled ``LoadBalancer``, driven by a
+deterministic open-loop ``OpenLoopTraffic`` generator on a virtual tick
+clock.  Built via ``Workspace.fleet(...)``; benchmarked by
+``benchmarks/fleet_bench.py`` into ``BENCH_fleet.json``.
+"""
+from repro.fleet.balancer import POLICIES, LoadBalancer
+from repro.fleet.pool import Replica, ReplicaPool
+from repro.fleet.traffic import Arrival, OpenLoopTraffic, TenantMix
+
+__all__ = ["Arrival", "LoadBalancer", "OpenLoopTraffic", "POLICIES",
+           "Replica", "ReplicaPool", "TenantMix"]

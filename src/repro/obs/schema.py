@@ -56,6 +56,16 @@ HIST_KEYS = ("count", "sum", "min", "max") + QUANTILE_KEYS
 SCHED_KEYS = ("preemptions", "eviction_unsupported", "live_slots", "streams")
 SCHED_STREAM_KEYS = ("stalled", "stall_hwm", "unevictable",
                      "evicted_requests", "admissions_deferred")
+FLEET_KEYS = ("name", "policy", "tick_s", "ticks", "virtual_time_s",
+              "arrivals", "served", "failed", "migrations", "balancer",
+              "autoscale", "replicas")
+FLEET_BALANCER_KEYS = ("policy", "queue_limit", "queue_depth", "offered",
+                       "placed", "rejected", "queue_hwm")
+FLEET_REPLICA_KEYS = ("name", "region", "boot_virtual_s", "ready_at",
+                      "draining", "retired", "served", "outstanding")
+STORE_KEYS = ("chunk_reads", "puts", "gets", "cache", "read_replicas")
+CACHE_KEYS = ("max_bytes", "nbytes", "entries", "hits", "misses",
+              "evictions")
 
 
 def check_histogram_summary(s: dict, where: str = "histogram") -> dict:
@@ -70,10 +80,39 @@ def check_scheduler_stats(s: dict, where: str = "scheduler") -> dict:
     return s
 
 
+def check_fleet_stats(s: dict, where: str = "fleet") -> dict:
+    """Validate one ``ReplicaPool.stats()`` dict; returns ``s``."""
+    _require(s, FLEET_KEYS, where)
+    _require(s["balancer"], FLEET_BALANCER_KEYS, f"{where}.balancer")
+    _require(s["autoscale"], ("enabled", "scale_ups", "retired"),
+             f"{where}.autoscale")
+    for r in s["replicas"]:
+        _require(r, FLEET_REPLICA_KEYS,
+                 f"{where}.replicas[{r.get('name')}]")
+    return s
+
+
+def check_registry_store_stats(s: dict,
+                               where: str = "registry_store") -> dict:
+    """Validate ``report()["registry_store"]`` (LRU cache counters and
+    regional read-replica summaries)."""
+    _require(s, STORE_KEYS, where)
+    if s["cache"] is not None:
+        _require(s["cache"], CACHE_KEYS, f"{where}.cache")
+    for rr in s["read_replicas"]:
+        _require(rr, ("region", "chunk_pulls", "chunk_pull_bytes",
+                      "ensure_passthrough", "cache"),
+                 f"{where}.read_replicas[{rr.get('region')}]")
+        _require(rr["cache"], CACHE_KEYS,
+                 f"{where}.read_replicas[{rr.get('region')}].cache")
+    return s
+
+
 def check_workspace_report(rep: dict) -> dict:
     """Validate the full ``Workspace.report()`` shape; returns ``rep``."""
     _require(rep, ("net", "registry_client", "registry_service", "sessions",
-                   "replays", "replayer_stats", "metrics", "schedulers"),
+                   "replays", "replayer_stats", "metrics", "schedulers",
+                   "fleet", "registry_store"),
              "report")
     if rep["net"] is not None:
         _require(rep["net"], NET_KEYS, "report.net")
@@ -86,6 +125,10 @@ def check_workspace_report(rep: dict) -> dict:
         check_histogram_summary(h, f"report.metrics.histograms[{k}]")
     for i, s in enumerate(rep["schedulers"]):
         check_scheduler_stats(s, f"report.schedulers[{i}]")
+    for i, s in enumerate(rep["fleet"]):
+        check_fleet_stats(s, f"report.fleet[{i}]")
+    check_registry_store_stats(rep["registry_store"],
+                               "report.registry_store")
     return rep
 
 
@@ -129,6 +172,31 @@ def _check_registry(d: dict) -> None:
                "delta_wire_lt_full"), "registry")
 
 
+def _check_fleet(d: dict) -> None:
+    _require(d, ("tenants", "traffic", "policies", "registry_boot"),
+             "fleet")
+    _require(d["traffic"], ("seed", "horizon_s", "burst_every_s",
+                            "burst_len_s", "burst_x", "arrivals"),
+             "fleet.traffic")
+    if len(d["policies"]) < 2:
+        raise SchemaError("fleet: need >= 2 placement policies, got "
+                          f"{len(d['policies'])}")
+    for row in d["policies"]:
+        where = f"fleet.policies[{row.get('policy')}]"
+        _require(row, ("policy", "per_tenant", "pool"), where)
+        for tenant, tr in row["per_tenant"].items():
+            _require(tr, ("served", "latency_quantiles"),
+                     f"{where}.per_tenant[{tenant}]")
+            _require(tr["latency_quantiles"], QUANTILE_KEYS,
+                     f"{where}.per_tenant[{tenant}].latency_quantiles")
+        check_fleet_stats(row["pool"], f"{where}.pool")
+    _require(d["registry_boot"], ("cold_boot_virtual_s",
+                                  "warm_boot_virtual_s", "reduction_pct"),
+             "fleet.registry_boot")
+    _flags(d, ("bit_exact_vs_solo", "warm_boot_cheaper_than_cold",
+               "warm_boot_reduction_ge_80pct"), "fleet")
+
+
 def _check_decode(d: dict) -> None:
     _require(d, ("depths", "replay_vs_live"), "decode")
     _flags(d, ("identical_streams_across_depths",), "decode")
@@ -146,6 +214,7 @@ BENCH_CHECKS = {
     "BENCH_replay.json": _check_replay,
     "BENCH_registry.json": _check_registry,
     "BENCH_decode.json": _check_decode,
+    "BENCH_fleet.json": _check_fleet,
 }
 
 
@@ -177,4 +246,5 @@ if __name__ == "__main__":
 
 
 __all__ = ["SchemaError", "check_workspace_report", "check_bench_file",
-           "check_histogram_summary", "check_scheduler_stats", "main"]
+           "check_histogram_summary", "check_scheduler_stats",
+           "check_fleet_stats", "check_registry_store_stats", "main"]

@@ -9,6 +9,7 @@ by fleets of clients; this package is the distribution layer between
     service.py  fetch-by-key, single-flight record-on-miss, delta publish
     client.py   chunked resumable fetch over NetworkEmulator, verify-then-
                 replay handoff into Replayer/Engine
+    replica.py  regional read-replicas with chunk caches (CDN fan-out)
 
 ``key_for`` is THE recording identity: record, serve, and the replayer's
 executable cache all key by it (one helper instead of three ad-hoc
@@ -18,6 +19,7 @@ from __future__ import annotations
 
 from repro.core.attest import fingerprint
 from repro.registry.client import FetchInterrupted, RegistryClient
+from repro.registry.replica import RegistryReadReplica
 from repro.registry.service import (RegistryService, parts_to_recording_bytes,
                                     recording_to_parts)
 from repro.registry.store import (LRUBytes, RecordingStore,
@@ -46,6 +48,7 @@ def key_for(arch: str, kind: str, shapes, mesh_fp: str) -> str:
 
 __all__ = [
     "FetchInterrupted", "LRUBytes", "RecordingStore", "RegistryClient",
-    "RegistryIntegrityError", "RegistryMissError", "RegistryService",
-    "key_arch", "key_for", "parts_to_recording_bytes", "recording_to_parts",
+    "RegistryIntegrityError", "RegistryMissError", "RegistryReadReplica",
+    "RegistryService", "key_arch", "key_for", "parts_to_recording_bytes",
+    "recording_to_parts",
 ]

@@ -1,0 +1,85 @@
+"""Registry read-replicas — CDN-style regional fan-out for recordings.
+
+A ``RegistryReadReplica`` fronts a primary ``RegistryService`` with a
+regional chunk cache: the first fetch of a popular key in a region pulls
+its chunks from the primary ONCE, every later fetch in that region is
+served from the regional ``LRUBytes`` — the primary's
+``stats['chunk_reads']`` stays flat no matter how many replicas boot
+(the read-replica effectiveness test pins exactly that).
+
+It duck-types the client-facing surface of ``RegistryService``
+(``chunk_size`` / ``has`` / ``entry`` / ``find`` / ``ensure`` /
+``read_chunk``), so a ``RegistryClient`` built against it needs no code
+changes; writes (``ensure`` record-on-miss leases) pass through to the
+primary — read-replicas replicate reads, never take leases themselves.
+
+Integrity is unchanged: a regionally cached chunk is re-verified against
+its content address on every hit (same rule as the store), and clients
+still HMAC-verify the assembled recording before unpickling — a
+compromised regional cache can only cause a detected integrity error,
+never bad replay bytes.
+"""
+from __future__ import annotations
+
+import collections
+
+from repro.registry.service import RegistryService
+from repro.registry.store import (LRUBytes, RegistryIntegrityError,
+                                  chunk_digest)
+
+
+class RegistryReadReplica:
+    """One region's read path onto a primary registry service."""
+
+    def __init__(self, primary: RegistryService, *, region: str,
+                 cache_bytes: int = 32 << 20, metrics=None):
+        self._primary = primary
+        self.region = region
+        self.cache = LRUBytes(cache_bytes, metrics=metrics, region=region)
+        self.stats = collections.Counter()
+
+    # ----------------------------------------------- read-path overrides --
+    def read_chunk(self, digest: str) -> bytes:
+        hit = self.cache.get(digest)
+        if hit is not None:
+            if chunk_digest(hit) != digest:    # re-verify EVERY read
+                raise RegistryIntegrityError(
+                    f"regional chunk {digest[:12]}... corrupted in "
+                    f"'{self.region}' cache")
+            return hit
+        raw = self._primary.read_chunk(digest)
+        self.cache.put(digest, raw)
+        self.stats["chunk_pulls"] += 1
+        self.stats["chunk_pull_bytes"] += len(raw)
+        return raw
+
+    # ------------------------------------------------ primary passthrough --
+    @property
+    def chunk_size(self) -> int:
+        return self._primary.chunk_size
+
+    def has(self, key: str) -> bool:
+        return self._primary.has(key)
+
+    def entry(self, key: str) -> dict:
+        return self._primary.entry(key)
+
+    def find(self, prefix: str):
+        return self._primary.find(prefix)
+
+    def ensure(self, key: str, record_fn=None) -> None:
+        # record-on-miss is a WRITE: it goes to the primary's single-flight
+        # lease; the resulting chunks then replicate here on first read
+        self.stats["ensure_passthrough"] += 1
+        return self._primary.ensure(key, record_fn)
+
+    # ---------------------------------------------------------- reporting --
+    def summary(self) -> dict:
+        return {"region": self.region,
+                "chunk_pulls": int(self.stats["chunk_pulls"]),
+                "chunk_pull_bytes": int(self.stats["chunk_pull_bytes"]),
+                "ensure_passthrough": int(self.stats["ensure_passthrough"]),
+                "cache": self.cache.summary()}
+
+
+__all__ = ["RegistryReadReplica"]

@@ -46,22 +46,37 @@ class RegistryMissError(KeyError):
 class LRUBytes:
     """Byte-budgeted LRU map of chunk digest -> raw chunk bytes.  Used as
     the client-side chunk cache (bounded so a device never holds more than
-    ``max_bytes`` of recording chunks)."""
+    ``max_bytes`` of recording chunks) and as the regional chunk cache of
+    registry read-replicas.
 
-    def __init__(self, max_bytes: int):
+    When a ``repro.obs.metrics.Metrics`` registry is attached, every
+    hit/miss/eviction also increments ``registry_cache_{hits,misses,
+    evictions}`` counters under the given labels (e.g. ``scope="store"``
+    or ``region="eu"``), so cache effectiveness is observable fleet-wide
+    without reaching into each cache's local counter."""
+
+    def __init__(self, max_bytes: int, *, metrics=None, **labels):
         self.max_bytes = max_bytes
         self._d: "collections.OrderedDict[str, bytes]" = \
             collections.OrderedDict()
         self.nbytes = 0
         self.stats = collections.Counter()
+        self._metrics = metrics
+        self._labels = labels
+
+    def _count(self, event: str):
+        self.stats[event] += 1
+        if self._metrics is not None:
+            self._metrics.counter(f"registry_cache_{event}",
+                                  **self._labels).inc()
 
     def get(self, digest: str) -> Optional[bytes]:
         blob = self._d.get(digest)
         if blob is None:
-            self.stats["misses"] += 1
+            self._count("misses")
             return None
         self._d.move_to_end(digest)
-        self.stats["hits"] += 1
+        self._count("hits")
         return blob
 
     def put(self, digest: str, blob: bytes):
@@ -73,7 +88,16 @@ class LRUBytes:
         while self.nbytes > self.max_bytes and len(self._d) > 1:
             _old, dropped = self._d.popitem(last=False)
             self.nbytes -= len(dropped)
-            self.stats["evictions"] += 1
+            self._count("evictions")
+
+    def summary(self) -> dict:
+        """Pinned cache accounting for reports: budget, occupancy, and
+        the hit/miss/eviction counters."""
+        return {"max_bytes": self.max_bytes, "nbytes": self.nbytes,
+                "entries": len(self._d),
+                "hits": int(self.stats["hits"]),
+                "misses": int(self.stats["misses"]),
+                "evictions": int(self.stats["evictions"])}
 
     def __contains__(self, digest: str) -> bool:
         return digest in self._d
@@ -97,12 +121,14 @@ class RecordingStore:
     registry key -> {part name -> bytes}."""
 
     def __init__(self, root: Optional[str] = None, *, key: bytes,
-                 chunk_size: int = CHUNK_SIZE, cache_bytes: int = 0):
+                 chunk_size: int = CHUNK_SIZE, cache_bytes: int = 0,
+                 metrics=None):
         self._root = root
         self._key = key
         self.chunk_size = chunk_size
         self._lock = threading.Lock()
-        self.cache = LRUBytes(cache_bytes) if cache_bytes > 0 else None
+        self.cache = LRUBytes(cache_bytes, metrics=metrics,
+                              scope="store") if cache_bytes > 0 else None
         self.stats = collections.Counter()
         self._mem_chunks: Dict[str, bytes] = {}
         self._entries: Dict[str, dict] = {}
@@ -293,6 +319,15 @@ class RecordingStore:
                 continue
             self.stats["gets"] += 1
             return {part: b"".join(pieces) for part, pieces in parts.items()}
+
+    def summary(self) -> dict:
+        """Store accounting for ``Workspace.report()``: operation counters
+        plus the LRU chunk-cache summary (None when the cache is off)."""
+        return {"chunk_reads": int(self.stats["chunk_reads"]),
+                "puts": int(self.stats["puts"]),
+                "gets": int(self.stats["gets"]),
+                "cache": self.cache.summary()
+                if self.cache is not None else None}
 
     def has(self, key: str) -> bool:
         with self._lock:
