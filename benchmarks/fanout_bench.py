@@ -1,0 +1,146 @@
+"""Multi-device record fan-out ladder (-> BENCH_fanout.json).
+
+A 13-variant wifi campaign (12 prefill seq buckets + decode for the
+cody-mnist smoke config) recorded four ways: serially with a cold
+speculator per session (today's ``Workload.record`` behavior — the
+baseline), then fanned out across 1/2/4/8 devices with the shared
+per-hardware-class speculation history.
+
+Every rung replays the SAME 13 compiled artifacts (``Workload.compile``
+once per variant, shared via the campaign's artifact dict), and the
+FIFO claim rule makes the variant *execution* order identical at every
+device count — so per-variant costs match across rungs and the ladder
+measures pure virtual-time concurrency.
+
+Acceptance (asserted into the JSON, CI-gated by ``repro.obs.schema``):
+  * campaign virtual time strictly monotone decreasing over 1/2/4/8;
+  * >= 70% virtual-time reduction at 4 devices vs the serial baseline;
+  * every fanned-out recording byte-identical to its serial counterpart
+    (payload, trees, exec fingerprint, and the cost-stripped manifest);
+  * shared-speculation hit rate >= the cold-per-session baseline,
+    computed from the speculator's own predict/hit counters.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.api import Workspace
+
+KEY = b"fanout-bench-key"
+JOBS = 24            # pinned GPU job count per session (determinism across
+                     # executable-size drift)
+SHAPES = dict(cache_len=64, block_k=4, batch=1, prefill_batch=1)
+SEQS = (8, 16, 24, 32, 40, 48, 56, 64, 72, 80, 96, 112)
+DEVICE_LADDER = (1, 2, 4, 8)
+
+
+def _strip_cost(manifest: dict) -> dict:
+    """Manifest minus the session-cost annotations (which legitimately
+    differ between a cold serial session and a history-warmed one)."""
+    return {k: v for k, v in manifest.items()
+            if k not in ("record_virtual_s", "record_session")}
+
+
+def _items(ws, seqs):
+    wl = ws.workload("cody-mnist", seq=seqs[0], **SHAPES)
+    return wl.variants(seqs=list(seqs), kinds=("prefill", "decode"))
+
+
+def _run_campaign(devices: int, seqs, artifacts: dict, *,
+                  share_history: bool):
+    """One fresh-registry campaign rung; returns (recordings, stats)."""
+    ws = Workspace(registry=":memory:", key=KEY, net="wifi", trace=True)
+    campaign = ws.campaign(_items(ws, seqs), devices=devices, jobs=JOBS,
+                           artifacts=artifacts,
+                           share_history=share_history,
+                           name=f"fanout-d{devices}"
+                                f"{'' if share_history else '-cold'}")
+    recs = campaign.run()
+    return recs, campaign.stats()
+
+
+def main(quick: bool = False, out_json: str = "BENCH_fanout.json"):
+    seqs = SEQS[:4] if quick else SEQS        # quick: 5-variant campaign
+    # compile each variant ONCE; every rung and the serial baseline replay
+    # these exact artifacts (recordings could not be byte-comparable
+    # otherwise — serialization is not deterministic across recompiles)
+    artifacts: dict = {}
+
+    # serial baseline: one device, cold speculator per session — exactly
+    # the per-variant behavior of today's serial Workload.record loop
+    serial_recs, serial_stats = _run_campaign(
+        1, seqs, artifacts, share_history=False)
+    serial_s = serial_stats["sum_record_virtual_s"]
+    cold_hit = serial_stats["speculation"]["hit_rate"]
+
+    ladder = []
+    bit_exact = True
+    for devices in DEVICE_LADDER:
+        recs, stats = _run_campaign(devices, seqs, artifacts,
+                                    share_history=True)
+        for key, rec in recs.items():
+            base = serial_recs[key]
+            bit_exact &= (
+                rec.payload == base.payload and rec.trees == base.trees
+                and rec.manifest["exec_fingerprint"]
+                == base.manifest["exec_fingerprint"]
+                and _strip_cost(rec.manifest) == _strip_cost(base.manifest))
+        ladder.append({
+            "devices": devices,
+            "virtual_time_s": stats["virtual_time_s"],
+            "recorded": stats["recorded"],
+            "publishes": stats["publishes"],
+            "spec_hit_rate": stats["speculation"]["hit_rate"],
+            "blocking_rts": sum(d["blocking_round_trips"]
+                                for d in stats["per_device"]),
+            "campaign": stats,
+        })
+
+    times = [r["virtual_time_s"] for r in ladder]
+    by_dev = {r["devices"]: r for r in ladder}
+    t4 = by_dev[4]["virtual_time_s"]
+    reduction4 = 1.0 - t4 / serial_s
+    shared_hit = by_dev[4]["spec_hit_rate"]
+    summary = {
+        "net": "wifi",
+        "variants": len(seqs) + 1,
+        "jobs": JOBS,
+        "serial": {
+            "sessions": serial_stats["recorded"],
+            "virtual_time_s": round(serial_s, 6),
+            "blocking_rts": sum(d["blocking_round_trips"]
+                                for d in serial_stats["per_device"]),
+            "campaign": serial_stats,
+        },
+        "device_ladder": ladder,
+        "speculation": {
+            "shared_hit_rate": shared_hit,
+            "cold_hit_rate": cold_hit,
+            # blocking-RTT drop the shared history buys at 4 devices
+            "blocking_rts_serial": sum(d["blocking_round_trips"]
+                                       for d in serial_stats["per_device"]),
+            "blocking_rts_shared": by_dev[4]["blocking_rts"],
+        },
+        "reduction_at_4_devices_pct": round(100.0 * reduction4, 2),
+        "monotone_virtual_time":
+            all(a > b for a, b in zip(times, times[1:])),
+        "fanout_reduction_ge_70pct": reduction4 >= 0.70,
+        "bit_exact_vs_serial": bit_exact,
+        "shared_spec_hit_ge_cold": shared_hit >= cold_hit,
+    }
+    with open(out_json, "w") as f:
+        json.dump(summary, f, indent=1)
+    rows = [{"devices": 0, "virtual_time_s": round(serial_s, 6),
+             "spec_hit_rate": cold_hit, "label": "serial",
+             "bit_exact": True}]
+    rows += [{"devices": r["devices"],
+              "virtual_time_s": r["virtual_time_s"],
+              "spec_hit_rate": r["spec_hit_rate"],
+              "label": f"{r['devices']}-device",
+              "bit_exact": bit_exact} for r in ladder]
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

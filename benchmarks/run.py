@@ -65,6 +65,15 @@ def _fleet_section(quick: bool):
               f"bit_exact={r['bit_exact']}")
 
 
+def _fanout_section(quick: bool):
+    _section("Record fan-out: device-count ladder + shared speculation "
+             "(-> BENCH_fanout.json)")
+    from benchmarks import fanout_bench
+    for r in fanout_bench.main(quick=quick):
+        print(f"fanout_{r['label']},{r['virtual_time_s']*1e6:.0f},"
+              f"hit={r['spec_hit_rate']};bit_exact={r['bit_exact']}")
+
+
 def _replay_section(quick: bool):
     _section("Replay vs native + replay-plan compaction ablation "
              "(-> BENCH_replay.json)")
@@ -91,10 +100,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: decode pipeline + multitenant + registry "
-                         "+ recording-ablation + replay + fleet benches only, "
-                         "emit BENCH_decode.json + BENCH_multitenant.json + "
-                         "BENCH_registry.json + BENCH_recording.json + "
-                         "BENCH_replay.json + BENCH_fleet.json")
+                         "+ recording-ablation + replay + fleet + fanout "
+                         "benches only, emit BENCH_decode.json + "
+                         "BENCH_multitenant.json + BENCH_registry.json + "
+                         "BENCH_recording.json + BENCH_replay.json + "
+                         "BENCH_fleet.json + BENCH_fanout.json")
     args = ap.parse_args()
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -106,6 +116,7 @@ def main() -> None:
         _recording_ablation_section(quick=True)
         _replay_section(quick=True)
         _fleet_section(quick=True)
+        _fanout_section(quick=True)
         print(f"\n# total bench wall time: {time.time()-t0:.1f}s")
         return
 
@@ -115,6 +126,7 @@ def main() -> None:
     _recording_ablation_section(quick=args.quick)
     _replay_section(quick=args.quick)
     _fleet_section(quick=args.quick)
+    _fanout_section(quick=args.quick)
 
     _section("Paper Fig.7 + Table 1: recording delays (emulated networks)")
     from benchmarks import record_replay

@@ -202,6 +202,26 @@ class Workload:
         self.sessions.append((kind, session.report()))
         return rec
 
+    def variants(self, *, seqs=None, kinds=KINDS):
+        """Campaign work-list for this workload's shape variants:
+        ``(Workload, kind)`` items covering every prefill ``seq`` bucket
+        in ``seqs`` (sibling workloads sharing every other shape) plus
+        the seq-independent kinds — feed to ``Workspace.campaign``.
+        ``seqs=None`` keeps just this workload's own seq."""
+        items = []
+        for kind in kinds:
+            if kind != "prefill":
+                items.append((self, kind))
+                continue
+            for s in (seqs if seqs is not None else [self.seq]):
+                wl = self if s == self.seq else self.ws.workload(
+                    self.cfg, cache_len=self.cache_len,
+                    block_k=self.block_k, batch=self.batch,
+                    prefill_batch=self.prefill_batch, seq=s,
+                    eos_id=self.eos_id, mesh=self.mesh)
+                items.append((wl, "prefill"))
+        return items
+
     # -------------------------------------------------------------- replay --
     def replay(self, kind: str = "prefill", *, passes=None,
                artifact: Optional[Recording] = None,

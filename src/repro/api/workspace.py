@@ -18,12 +18,13 @@ from repro.core.netem import PROFILES, NetProfile, NetworkEmulator
 from repro.obs.metrics import Metrics
 from repro.obs.trace import NULL, Tracer
 from repro.fleet.pool import Replica, ReplicaPool
-from repro.record import CloudDryrun, RecordingSession
+from repro.record import (CloudDryrun, DeviceSlot, RecordCampaign,
+                          RecordingSession, VariantSpec)
 from repro.registry import (RecordingStore, RegistryClient,
                             RegistryReadReplica, RegistryService)
 from repro.serving.scheduler import Scheduler
 
-from repro.api.workload import Workload
+from repro.api.workload import KINDS, Workload
 
 _Net = Union[None, str, NetProfile, NetworkEmulator]
 
@@ -70,6 +71,7 @@ class Workspace:
         self.workloads = []
         self.schedulers = []
         self.fleets = []
+        self.campaigns = []
         self.store_cache_bytes = store_cache_bytes
         self.metrics = Metrics()
         # trace=True builds a Tracer on the workspace link's virtual clock
@@ -183,6 +185,60 @@ class Workspace:
                                                 tracer=self.tracer)
         return RecordingSession.local(passes=passes, cloud=cloud,
                                       tracer=self.tracer)
+
+    def campaign(self, items, *, devices: int = 2, nets=None,
+                 hw_class: str = "edge-gpu", share_history: bool = True,
+                 passes=None, jobs: Optional[int] = None,
+                 tick_s: float = 0.02, name: Optional[str] = None,
+                 publish: Optional[bool] = None,
+                 artifacts: Optional[dict] = None,
+                 max_ticks: int = 500_000) -> RecordCampaign:
+        """Multi-device record fan-out: a ``RecordCampaign`` over this
+        workspace's registry and link profile.
+
+        ``items`` are ``Workload``s (expanded over every kind),
+        ``(Workload, kind)`` pairs, or prepared ``VariantSpec``s.  Each of
+        the ``devices`` slots gets its OWN emulator — per-device billing
+        never aliases — on the workspace profile, or round-robin over
+        ``nets`` (profile names / ``NetProfile``s).  ``publish`` defaults
+        to whether the workspace has a registry: claimed variants then go
+        through the multi-variant lease and publish incrementally.  The
+        campaign is returned un-run; call ``.run()``."""
+        variants = []
+        for it in items:
+            if isinstance(it, VariantSpec):
+                variants.append(it)
+                continue
+            wl, kinds = (it if isinstance(it, tuple) else (it, None))
+            for kind in ([kinds] if isinstance(kinds, str)
+                         else (kinds or KINDS)):
+                variants.append(VariantSpec(
+                    wl.key(kind),
+                    (lambda w=wl, k=kind: w.compile(k)),
+                    label=f"{wl.cfg.name}/{kind}/"
+                          f"b{wl.static_meta(kind)['batch']}"
+                          f"s{wl.seq if kind == 'prefill' else '-'}"))
+        net_specs = list(nets) if nets else [None]
+        slots = []
+        for i in range(devices):
+            spec = net_specs[i % len(net_specs)]
+            netem = self.fresh_netem() if spec is None \
+                else _resolve_net(spec)
+            slots.append(DeviceSlot(f"dev{i}", netem, hw_class=hw_class))
+        if publish is None:
+            publish = self.has_registry
+        c = RecordCampaign(
+            variants, slots, share_history=share_history,
+            artifacts=artifacts,
+            passes=self.record_passes if passes is None else passes,
+            jobs=jobs, tick_s=tick_s,
+            name=name if name is not None
+            else f"campaign{len(self.campaigns)}",
+            tracer=self.tracer, metrics=self.metrics,
+            service=self.service if publish else None,
+            max_ticks=max_ticks)
+        self.campaigns.append(c)
+        return c
 
     # ---------------------------------------------------------- workloads --
     def workload(self, arch, *, shapes: Optional[dict] = None, mesh=None,
@@ -315,6 +371,7 @@ class Workspace:
             "metrics": self.metrics.snapshot(),
             "schedulers": [s.stats() for s in self.schedulers],
             "fleet": [p.stats() for p in self.fleets],
+            "campaigns": [c.stats() for c in self.campaigns],
             "registry_store": self._registry_store_stats(),
         }
 

@@ -44,6 +44,7 @@ class HistorySpeculator:
         return f"{stream}::{sites}" if stream else sites
 
     def predict(self, ops: List[Op], stream: str = "") -> Optional[Tuple]:
+        self.stats["predicts"] += 1
         key = self._key(ops, stream)
         h = self.history.get(key)
         if h is None or len(h) < self.k:
@@ -57,9 +58,17 @@ class HistorySpeculator:
         return None
 
     def record(self, ops: List[Op], outcome: Tuple, stream: str = ""):
+        self.stats["records"] += 1
         key = self._key(ops, stream)
         self.history.setdefault(key, collections.deque(maxlen=16)).append(
             tuple(outcome))
+
+    def hit_rate(self) -> float:
+        """Fraction of ``predict()`` calls that produced a usable
+        prediction — the shared-history lift metric the record fan-out
+        campaign reports per (hw_class, device)."""
+        n = self.stats["predicts"]
+        return (self.stats["predicted"] / n) if n else 0.0
 
 
 class SpeculativeRunner:

@@ -58,6 +58,9 @@ def main(argv=None):
     ap.add_argument("--passes", default="all",
                     help="comma list of record-session optimization passes "
                          "(deferral,speculation,metasync) | all | none")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="> 1 fans the kinds out across a device pool "
+                         "(campaign API) instead of recording serially")
     args = ap.parse_args(argv)
 
     registry = None
@@ -69,7 +72,32 @@ def main(argv=None):
                      block_k=args.block_k, batch=args.batch,
                      prefill_batch=args.prefill_batch, seq=args.seq)
     os.makedirs(args.out, exist_ok=True)
-    for kind in args.kinds.split(","):
+    kinds = [k for k in args.kinds.split(",") if k.strip()]
+    if args.devices > 1:
+        # fan the kinds out across a device pool; each finished variant
+        # publishes through the campaign's multi-variant lease
+        campaign = ws.campaign([(wl, k) for k in kinds],
+                               devices=args.devices,
+                               name=f"record-{args.arch}")
+        recs = campaign.run()
+        for kind in kinds:
+            rec = recs.get(wl.key(kind))
+            if rec is None:
+                print(f"skipped {kind}: already published / leased")
+                continue
+            path = os.path.join(args.out, recording_name(args.arch, kind))
+            rec.save(path, ws.key)
+            print(f"recorded {kind}: {path} "
+                  f"({len(rec.payload)/1e3:.1f} kB executable)")
+            print("  " + format_session_report(
+                rec.manifest["record_session"]))
+        s = campaign.stats()
+        print(f"campaign[{s['devices']} devices]: "
+              f"{s['virtual_time_s']:.2f}s virtual makespan vs "
+              f"{s['sum_record_virtual_s']:.2f}s summed, "
+              f"{s['publishes']} published")
+        return
+    for kind in kinds:
         # one two-party session per recording: fresh device proxy, fresh
         # speculation history, per-recording report
         rec = wl.record(kind)

@@ -66,6 +66,13 @@ FLEET_REPLICA_KEYS = ("name", "region", "boot_virtual_s", "ready_at",
 STORE_KEYS = ("chunk_reads", "puts", "gets", "cache", "read_replicas")
 CACHE_KEYS = ("max_bytes", "nbytes", "entries", "hits", "misses",
               "evictions")
+CAMPAIGN_KEYS = ("name", "devices", "variants", "recorded",
+                 "skipped_published", "skipped_leased", "share_history",
+                 "tick_s", "ticks", "virtual_time_s",
+                 "sum_record_virtual_s", "publishes", "compiles",
+                 "artifact_reuses", "speculation", "per_device")
+CAMPAIGN_DEVICE_KEYS = ("name", "hw_class", "net", "recorded",
+                        "busy_virtual_s", "blocking_round_trips", "spec")
 
 
 def check_histogram_summary(s: dict, where: str = "histogram") -> dict:
@@ -108,11 +115,24 @@ def check_registry_store_stats(s: dict,
     return s
 
 
+def check_campaign_stats(s: dict, where: str = "campaign") -> dict:
+    """Validate one ``RecordCampaign.stats()`` dict; returns ``s``."""
+    _require(s, CAMPAIGN_KEYS, where)
+    _require(s["speculation"], ("predicts", "hits", "records", "hit_rate",
+                                "shared"), f"{where}.speculation")
+    for d in s["per_device"]:
+        _require(d, CAMPAIGN_DEVICE_KEYS,
+                 f"{where}.per_device[{d.get('name')}]")
+        _require(d["spec"], ("predict", "hit", "record"),
+                 f"{where}.per_device[{d.get('name')}].spec")
+    return s
+
+
 def check_workspace_report(rep: dict) -> dict:
     """Validate the full ``Workspace.report()`` shape; returns ``rep``."""
     _require(rep, ("net", "registry_client", "registry_service", "sessions",
                    "replays", "replayer_stats", "metrics", "schedulers",
-                   "fleet", "registry_store"),
+                   "fleet", "campaigns", "registry_store"),
              "report")
     if rep["net"] is not None:
         _require(rep["net"], NET_KEYS, "report.net")
@@ -127,6 +147,8 @@ def check_workspace_report(rep: dict) -> dict:
         check_scheduler_stats(s, f"report.schedulers[{i}]")
     for i, s in enumerate(rep["fleet"]):
         check_fleet_stats(s, f"report.fleet[{i}]")
+    for i, s in enumerate(rep["campaigns"]):
+        check_campaign_stats(s, f"report.campaigns[{i}]")
     check_registry_store_stats(rep["registry_store"],
                                "report.registry_store")
     return rep
@@ -197,6 +219,23 @@ def _check_fleet(d: dict) -> None:
                "warm_boot_reduction_ge_80pct"), "fleet")
 
 
+def _check_fanout(d: dict) -> None:
+    _require(d, ("net", "variants", "device_ladder", "serial",
+                 "speculation", "reduction_at_4_devices_pct"), "fanout")
+    _require(d["serial"], ("sessions", "virtual_time_s"), "fanout.serial")
+    if len(d["device_ladder"]) < 3:
+        raise SchemaError("fanout: need a >= 3-rung device ladder, got "
+                          f"{len(d['device_ladder'])}")
+    for row in d["device_ladder"]:
+        where = f"fanout.device_ladder[{row.get('devices')}]"
+        _require(row, ("devices", "virtual_time_s", "campaign"), where)
+        check_campaign_stats(row["campaign"], f"{where}.campaign")
+    _require(d["speculation"], ("shared_hit_rate", "cold_hit_rate"),
+             "fanout.speculation")
+    _flags(d, ("monotone_virtual_time", "fanout_reduction_ge_70pct",
+               "bit_exact_vs_serial", "shared_spec_hit_ge_cold"), "fanout")
+
+
 def _check_decode(d: dict) -> None:
     _require(d, ("depths", "replay_vs_live"), "decode")
     _flags(d, ("identical_streams_across_depths",), "decode")
@@ -215,6 +254,7 @@ BENCH_CHECKS = {
     "BENCH_registry.json": _check_registry,
     "BENCH_decode.json": _check_decode,
     "BENCH_fleet.json": _check_fleet,
+    "BENCH_fanout.json": _check_fanout,
 }
 
 
@@ -247,4 +287,5 @@ if __name__ == "__main__":
 
 __all__ = ["SchemaError", "check_workspace_report", "check_bench_file",
            "check_histogram_summary", "check_scheduler_stats",
-           "check_fleet_stats", "check_registry_store_stats", "main"]
+           "check_fleet_stats", "check_campaign_stats",
+           "check_registry_store_stats", "main"]

@@ -10,12 +10,15 @@ metastate-only sync (§5) — composed as stackable interceptor passes.
 """
 from repro.record.cloud import REPLAY_CONSUMED_SITES, CloudDryrun
 from repro.record.device import DeviceProxy, FlakyRegisterDevice
+from repro.record.fanout import (DeviceSlot, RecordCampaign,
+                                 SpeculationHistoryStore, VariantSpec)
 from repro.record.session import (PASS_NAMES, DeferralPass, MetasyncPass,
-                                  RecordingSession, SpeculationPass,
-                                  WireLink, resolve_passes)
+                                  RecordingSession, SessionReusedError,
+                                  SpeculationPass, WireLink, resolve_passes)
 
 __all__ = [
     "CloudDryrun", "DeviceProxy", "FlakyRegisterDevice", "RecordingSession",
-    "DeferralPass", "SpeculationPass", "MetasyncPass", "WireLink",
-    "PASS_NAMES", "resolve_passes", "REPLAY_CONSUMED_SITES",
+    "SessionReusedError", "DeferralPass", "SpeculationPass", "MetasyncPass",
+    "WireLink", "PASS_NAMES", "resolve_passes", "REPLAY_CONSUMED_SITES",
+    "RecordCampaign", "DeviceSlot", "SpeculationHistoryStore", "VariantSpec",
 ]

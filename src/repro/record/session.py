@@ -26,6 +26,7 @@ plus zeroed session fields in the manifest.
 from __future__ import annotations
 
 import collections
+import traceback
 from typing import Optional, Sequence, Tuple, Union
 
 from repro.core.deferral import CommitQueue
@@ -39,6 +40,33 @@ from repro.record.cloud import CloudDryrun
 from repro.record.device import POLL_TRIPS, DeviceProxy
 
 PASS_NAMES = ("deferral", "speculation", "metasync")
+
+
+class SessionReusedError(RuntimeError):
+    """A ``RecordingSession`` was exercised twice.
+
+    Sessions are single-use — device state, speculation history,
+    delta-sync bases and per-pass accounting all belong to ONE recording.
+    The message names the call site that consumed the session first, so a
+    fan-out scheduler handing sessions around can find the offender."""
+
+    def __init__(self, first_use_site: str):
+        super().__init__(
+            "RecordingSession is single-use: build a new session per "
+            "recording (its device state, speculation history and "
+            "accounting belong to one record); this session was first "
+            f"used at {first_use_site}")
+        self.first_use_site = first_use_site
+
+
+def _caller_site() -> str:
+    """Deepest stack frame outside this module — where exercise() was
+    entered from."""
+    here = __file__
+    for frame in reversed(traceback.extract_stack()):
+        if frame.filename != here:
+            return f"{frame.filename}:{frame.lineno} (in {frame.name})"
+    return "<unknown>"
 
 
 def resolve_passes(passes: Union[str, Sequence[str], None]) \
@@ -209,9 +237,11 @@ class SpeculationPass(LinkLayer):
     ROLLBACK_BASE_S = 0.5     # local log replay, no network (§7.3)
     ROLLBACK_PER_OP_S = 2.0 / 8000
 
-    def __init__(self, k: int = 3):
+    def __init__(self, k: int = 3,
+                 speculator: Optional[HistorySpeculator] = None):
         super().__init__()
         self.k = k
+        self.speculator = speculator
         self.runner: Optional[SpeculativeRunner] = None
         self._validated_log_len = 0
 
@@ -219,9 +249,13 @@ class SpeculationPass(LinkLayer):
         super().bind(session)
         # a checkpoint is the device metastate snapshot + the log position
         # it was taken at: rollback restores the snapshot, then REPLAYS the
-        # log suffix so no executed write is lost (§7.3 replay recovery)
+        # log suffix so no executed write is lost (§7.3 replay recovery).
+        # An injected speculator lets a campaign share prediction history
+        # across sessions of one hardware class (devices warm each other).
+        spec = self.speculator if self.speculator is not None \
+            else HistorySpeculator(k=self.k)
         self.runner = SpeculativeRunner(
-            session.q, HistorySpeculator(k=self.k),
+            session.q, spec,
             lambda: (session.device.snapshot(), len(session.q.log)),
             self._rollback)
 
@@ -311,7 +345,8 @@ class RecordingSession:
                  cloud: Optional[CloudDryrun] = None,
                  netem: Optional[NetworkEmulator] = None,
                  passes: Union[str, Sequence[str], None] = "all",
-                 tracer=NULL):
+                 tracer=NULL,
+                 speculator: Optional[HistorySpeculator] = None):
         self.device = device if device is not None else DeviceProxy()
         self.cloud = cloud if cloud is not None else CloudDryrun()
         self.netem = netem
@@ -325,7 +360,7 @@ class RecordingSession:
         if "deferral" in self.pass_names:
             self.layers.append(DeferralPass())
         if "speculation" in self.pass_names:
-            self.layers.append(SpeculationPass())
+            self.layers.append(SpeculationPass(speculator=speculator))
         self.layers.append(WireLink())
         for outer, inner in zip(self.layers, self.layers[1:]):
             outer.inner = inner
@@ -335,7 +370,7 @@ class RecordingSession:
         self.root = self.layers[0]
         self._totals = self._zero_totals()
         self.jobs = 0
-        self._exercised = False
+        self._first_use_site: Optional[str] = None
 
     # ------------------------------------------------------- constructors --
     @classmethod
@@ -377,12 +412,9 @@ class RecordingSession:
         and per-pass accounting all belong to ONE recording — reuse would
         make the manifest's totals and counters disagree.  Build a fresh
         session per recording."""
-        if self._exercised:
-            raise RuntimeError(
-                "RecordingSession is single-use: build a new session per "
-                "recording (its device state, speculation history and "
-                "accounting belong to one record)")
-        self._exercised = True
+        if self._first_use_site is not None:
+            raise SessionReusedError(self._first_use_site)
+        self._first_use_site = _caller_site()
         mark = self.netem.checkpoint() if self.netem else None
         root = self.root
         tr = self.tracer
@@ -439,5 +471,6 @@ class RecordingSession:
         rec.manifest["record_session"] = rep
 
 
-__all__ = ["RecordingSession", "LinkLayer", "WireLink", "DeferralPass",
-           "SpeculationPass", "MetasyncPass", "PASS_NAMES", "resolve_passes"]
+__all__ = ["RecordingSession", "SessionReusedError", "LinkLayer", "WireLink",
+           "DeferralPass", "SpeculationPass", "MetasyncPass", "PASS_NAMES",
+           "resolve_passes"]

@@ -20,7 +20,8 @@ from __future__ import annotations
 from repro.core.attest import fingerprint
 from repro.registry.client import FetchInterrupted, RegistryClient
 from repro.registry.replica import RegistryReadReplica
-from repro.registry.service import (RegistryService, parts_to_recording_bytes,
+from repro.registry.service import (RegistryService, VariantLeaseSet,
+                                    parts_to_recording_bytes,
                                     recording_to_parts)
 from repro.registry.store import (LRUBytes, RecordingStore,
                                   RegistryIntegrityError, RegistryMissError)
@@ -49,6 +50,6 @@ def key_for(arch: str, kind: str, shapes, mesh_fp: str) -> str:
 __all__ = [
     "FetchInterrupted", "LRUBytes", "RecordingStore", "RegistryClient",
     "RegistryIntegrityError", "RegistryMissError", "RegistryReadReplica",
-    "RegistryService", "key_arch", "key_for", "parts_to_recording_bytes",
-    "recording_to_parts",
+    "RegistryService", "VariantLeaseSet", "key_arch", "key_for",
+    "parts_to_recording_bytes", "recording_to_parts",
 ]

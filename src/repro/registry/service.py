@@ -208,6 +208,21 @@ class RegistryService:
         self.ensure(key, record_fn)
         return self.fetch_bytes(key)
 
+    # ------------------------------------------------- multi-variant lease --
+    def variant_lease(self, group: str, keys) -> "VariantLeaseSet":
+        """Multi-variant lease fan-out for recording campaigns.
+
+        ``ensure()`` single-flights ONE key: N missers of the same key
+        produce one record.  A campaign populating a key's shape variants
+        wants the dual: N workers each claim a DIFFERENT variant and
+        record concurrently.  The returned set's ``claim(key)`` takes the
+        per-key lease under the same ``self._leases`` table ``ensure()``
+        uses, so a plain client missing on a variant mid-campaign becomes
+        a waiter on the campaign worker's lease — the two mechanisms
+        compose instead of racing."""
+        self.stats["variant_lease_groups"] += 1
+        return VariantLeaseSet(self, group, list(keys))
+
     # ------------------------------------------------- store passthroughs --
     @property
     def chunk_size(self) -> int:
@@ -224,3 +239,80 @@ class RegistryService:
 
     def read_chunk(self, digest: str) -> bytes:
         return self._store.read_chunk(digest)
+
+
+class VariantLeaseSet:
+    """A campaign's claims over one key-group's variants.
+
+    Each ``claim(key)`` either takes that key's single-flight lease (the
+    SAME per-key ``threading.Event`` table ``RegistryService.ensure``
+    blocks on, so concurrent plain missers become waiters of the
+    campaign worker) or reports why not: ``"published"`` (someone already
+    has it) / ``"leased"`` (another worker is recording it right now).
+    ``complete(key, rec)`` publishes and releases; ``fail(key)`` releases
+    without publishing, waking waiters into their own miss handling."""
+
+    def __init__(self, service: RegistryService, group: str,
+                 keys: list):
+        self.service = service
+        self.group = group
+        self.keys = keys
+        self.owned: set = set()
+        self.stats = collections.Counter()
+
+    def claim(self, key: str) -> Optional[str]:
+        """Try to take ``key``'s lease.  Returns None on success, else
+        the skip reason ("published" / "leased")."""
+        svc = self.service
+        with svc._lock:
+            if svc._store.has(key):
+                svc.stats["hits"] += 1
+                self.stats["skipped_published"] += 1
+                return "published"
+            if key in svc._leases:
+                self.stats["skipped_leased"] += 1
+                return "leased"
+            svc._leases[key] = threading.Event()
+            self.owned.add(key)
+        svc.stats["variant_claims"] += 1
+        self.stats["claims"] += 1
+        if svc.tracer:
+            svc.tracer.instant("registry.variant_claim", "registry",
+                               group=self.group, key=key)
+        return None
+
+    def _release(self, key: str) -> None:
+        svc = self.service
+        with svc._lock:
+            lease = svc._leases.pop(key, None)
+        self.owned.discard(key)
+        if lease is not None:
+            lease.set()
+
+    def complete(self, key: str, rec: Recording) -> dict:
+        """Publish the finished variant (delta-packed per key) and wake
+        its waiters.  The lease is released even if publish raises —
+        waiters then re-check the store and surface the miss themselves,
+        exactly as ``ensure()``'s failure path behaves."""
+        if key not in self.owned:
+            raise KeyError(f"variant '{key}' is not leased by this "
+                           f"campaign ('{self.group}')")
+        try:
+            if not rec.signature:
+                rec.sign_with(self.service._key)
+            out = self.service.publish(key, rec)
+            self.service.stats["records"] += 1
+            self.stats["completed"] += 1
+            return out
+        finally:
+            self._release(key)
+
+    def fail(self, key: str) -> None:
+        """Give up a claimed variant without publishing (no-op for keys
+        this set does not own)."""
+        if key in self.owned:
+            self.stats["failed"] += 1
+            self._release(key)
+
+    def outstanding(self) -> set:
+        return set(self.owned)

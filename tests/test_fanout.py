@@ -1,0 +1,297 @@
+"""Multi-device record fan-out: RecordCampaign scheduling, shared
+per-hardware-class speculation history, multi-variant lease fan-out,
+per-device netem span isolation, and the SessionReusedError satellite."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import Workspace
+from repro.core.netem import WIFI, NetworkEmulator
+from repro.core.recorder import compile_artifact
+from repro.core.recording import Recording
+from repro.core.speculation import HistorySpeculator
+from repro.record import (CloudDryrun, DeviceProxy, DeviceSlot,
+                          RecordCampaign, RecordingSession,
+                          SessionReusedError, VariantSpec)
+from repro.registry.store import RegistryMissError
+
+KEY = b"fanout-test-key"
+SHAPES = dict(cache_len=32, block_k=4, batch=2, prefill_batch=1, seq=8)
+
+
+def _tiny():
+    return (lambda x: jnp.tanh(x) * 2.0,
+            (jax.ShapeDtypeStruct((8,), jnp.float32),))
+
+
+@pytest.fixture(scope="module")
+def artifact():
+    fn, spec = _tiny()
+    return compile_artifact("t", fn, spec)
+
+
+def _copy(rec):
+    return Recording(dict(rec.manifest), rec.payload, rec.trees)
+
+
+def _ws(**kw):
+    return Workspace(registry=":memory:", key=KEY, net="wifi", **kw)
+
+
+def _campaign(ws, *, devices=2, seqs=(8, 16), **kw):
+    wl = ws.workload("cody-mnist", **SHAPES)
+    items = wl.variants(seqs=list(seqs), kinds=("prefill", "decode"))
+    return ws.campaign(items, devices=devices, jobs=6, **kw)
+
+
+# ------------------------------------------------ SessionReusedError ----
+def test_session_reuse_raises_dedicated_error(artifact):
+    """Second exercise() raises SessionReusedError naming the call site
+    that consumed the session first (still a RuntimeError carrying
+    "single-use", so existing handlers keep working)."""
+    session = RecordingSession.for_profile(WIFI)
+    session.finalize(_copy(artifact))          # first (legitimate) use
+    with pytest.raises(SessionReusedError, match="single-use") as ei:
+        session.exercise(_copy(artifact))
+    assert isinstance(ei.value, RuntimeError)
+    # the offending FIRST-use site is this test file, recorded at the
+    # finalize() call above
+    assert "test_fanout.py" in ei.value.first_use_site
+    assert ei.value.first_use_site in str(ei.value)
+
+
+# ------------------------------------------- shared speculation history ----
+def test_injected_speculator_warms_across_sessions(artifact):
+    """Device B's session starts with device A's validated history: same
+    work, strictly fewer blocking round trips, and the lift shows up in
+    the speculator's own predict/hit counters."""
+    def run(spec):
+        s = RecordingSession(device=DeviceProxy(), cloud=CloudDryrun(jobs=6),
+                             netem=NetworkEmulator(WIFI), speculator=spec)
+        s.finalize(_copy(artifact))
+        return s.report()
+
+    cold_a = run(None)                         # private speculator each
+    cold_b = run(None)
+    assert cold_a["blocking_round_trips"] == cold_b["blocking_round_trips"]
+
+    shared = HistorySpeculator(k=3)
+    run(shared)
+    hits_after_first = int(shared.stats["predicted"])
+    warm = run(shared)                         # second device, same history
+    assert warm["blocking_round_trips"] < cold_b["blocking_round_trips"]
+    assert warm["virtual_time_s"] < cold_b["virtual_time_s"]
+    assert int(shared.stats["predicted"]) > hits_after_first
+    assert shared.stats["predicts"] > 0 and shared.stats["records"] > 0
+
+
+# ------------------------------------------------------- campaign core ----
+def test_campaign_records_all_variants_and_publishes():
+    ws = _ws()
+    c = _campaign(ws, devices=2)
+    recs = c.run()
+    s = c.stats()
+    assert s["recorded"] == s["variants"] == len(recs) == 3
+    assert s["publishes"] == 3
+    for key in recs:
+        assert ws.service.has(key)             # incrementally published
+    assert ws.service.stats["variant_lease_groups"] == 1
+    assert ws.service.stats["variant_claims"] == 3
+    # fan-out beat the serial sum of its own records
+    assert s["virtual_time_s"] < s["sum_record_virtual_s"]
+    # report() carries the campaign block and passes the pinned schema
+    from repro.obs.schema import check_workspace_report
+    rep = check_workspace_report(ws.report())
+    assert rep["campaigns"][0]["name"] == s["name"]
+
+
+def test_campaign_execution_order_is_device_count_invariant():
+    """FIFO claiming makes execution order = queue order at every device
+    count, so per-variant session costs are identical across the ladder
+    and the makespan shrinkage is pure concurrency."""
+    arts = {}
+    times = {}
+    for devices in (1, 2, 4):
+        c = _campaign(_ws(), devices=devices, seqs=(8, 16, 24),
+                      artifacts=arts, name=f"ladder-d{devices}")
+        c.run()
+        s = c.stats()
+        # same per-variant costs in the same order at every width (to
+        # within the report's rounding: different devices' emulators sit
+        # at different absolute clock values, so deltas differ in the
+        # last ulp)
+        order = [k for k, _rep in c.sessions]
+        durations = [rep["virtual_time_s"] for _k, rep in c.sessions]
+        assert order == times.setdefault("order", order)
+        assert durations == pytest.approx(
+            times.setdefault("durations", durations), abs=1e-5)
+        times[devices] = s["virtual_time_s"]
+    assert times[1] > times[2] > times[4]      # strictly monotone
+
+
+def test_campaign_skips_already_published_variants():
+    ws = _ws()
+    arts = {}
+    _campaign(ws, artifacts=arts, name="first").run()
+    c2 = _campaign(ws, artifacts=arts, name="second")
+    c2.run()
+    s = c2.stats()
+    assert s["recorded"] == 0 and s["skipped_published"] == 3
+    assert s["virtual_time_s"] == 0.0
+
+
+def test_campaign_recordings_bit_exact_vs_serial():
+    """A fanned-out variant is byte-identical to the same variant recorded
+    through today's serial cold-session path (shared artifact, so
+    payload/trees/fingerprint must match exactly)."""
+    arts = {}
+    serial = _campaign(_ws(), devices=1, share_history=False,
+                       artifacts=arts, name="serial").run()
+    fanned = _campaign(_ws(), devices=2, artifacts=arts,
+                       name="fanned").run()
+    assert set(serial) == set(fanned)
+    for key, rec in fanned.items():
+        base = serial[key]
+        assert rec.payload == base.payload and rec.trees == base.trees
+        assert rec.manifest["exec_fingerprint"] == \
+            base.manifest["exec_fingerprint"]
+
+
+def test_campaign_is_single_run_and_deterministic():
+    c = _campaign(_ws(), name="det-a")
+    c.run()
+    with pytest.raises(RuntimeError, match="already ran"):
+        c.run()
+    c2 = _campaign(_ws(), name="det-a")
+    c2.run()
+    a, b = c.stats(), c2.stats()
+    assert a == b                              # virtual clock: no wall, no rng
+
+
+# ------------------------------- per-device billing + netem span aliasing ----
+def test_per_device_netem_spans_do_not_alias():
+    """Sessions interleave across devices on the campaign tick clock;
+    each device's emulator must bill exactly its own sessions' spans
+    (checkpoint()/delta() per session, one emulator per device)."""
+    ws = _ws()
+    c = _campaign(ws, devices=2, seqs=(8, 16, 24))
+    c.run()
+    assert len({id(d.netem) for d in c.devices}) == 2
+    billed = {}
+    # device emulator totals == sum of its own sessions (reports carry the
+    # per-session checkpoint/delta split; busy_virtual_s accumulates them)
+    for d in c.devices:
+        # busy_virtual_s sums per-session reports (rounded to 6 decimals
+        # each), so allow that rounding to accumulate
+        assert d.netem.virtual_time_s == pytest.approx(d.busy_virtual_s,
+                                                       abs=1e-5)
+        billed[d.name] = d.netem.snapshot()
+    # both devices worked, and neither absorbed the other's traffic
+    assert all(b["round_trips"] > 0 for b in billed.values())
+    total_rts = sum(b["round_trips"] for b in billed.values())
+    assert total_rts == sum(rep["blocking_round_trips"]
+                            for _k, rep in c.sessions)
+    assert sum(d.recorded for d in c.devices) == len(c.sessions)
+
+
+def test_interleaved_checkpoint_delta_spans_across_devices():
+    """The raw netem span API under campaign-style interleaving: spans
+    opened on different emulators, advanced in alternation, must each see
+    only their own traffic."""
+    a, b = NetworkEmulator(WIFI), NetworkEmulator(WIFI)
+    ma, mb = a.checkpoint(), b.checkpoint()
+    a.round_trip(send_bytes=100, recv_bytes=100)
+    b.round_trip(send_bytes=200, recv_bytes=200)
+    a.round_trip(send_bytes=100, recv_bytes=100)
+    mb2 = b.checkpoint()                       # nested span on b only
+    b.async_trip(send_bytes=50, recv_bytes=0)
+    a.one_way(1000, direction="recv")          # no round trip billed
+    da, db2, db = a.delta(ma), b.delta(mb2), b.delta(mb)
+    assert da["round_trips"] == 2 and da["async_trips"] == 0
+    assert db["round_trips"] == 1 and db["async_trips"] == 1
+    assert db2["round_trips"] == 0 and db2["async_trips"] == 1
+    assert da["bytes_sent"] == 200 and da["bytes_received"] == 200 + 1000
+    assert db["bytes_sent"] == 250 and db["bytes_received"] == 200
+    # virtual time billed on each link is independent of the other's
+    assert a.delta(ma)["time_s"] == da["time_s"]
+    assert da["time_s"] != db["time_s"]
+
+
+# ------------------------------------------------ per-device spec metrics ----
+def test_per_device_speculation_metrics_counters():
+    ws = _ws()
+    c = _campaign(ws, devices=2, seqs=(8, 16, 24))
+    c.run()
+    snap = ws.metrics.snapshot()["counters"]
+    for d in c.devices:
+        if not d.recorded:
+            continue
+        for stat in ("predict", "hit", "record"):
+            k = (f"spec_history_{stat}{{device={d.name},"
+                 f"hw_class=edge-gpu}}")
+            assert snap.get(k, 0) == d.stats[f"spec_{stat}"] > 0
+    h = ws.metrics.get_histogram("fanout_record_s", campaign=c.name,
+                                 device="dev0")
+    assert h is not None and h.count == c.devices[0].recorded
+    # campaign hit accounting comes from those counters, not RTTs
+    s = c.stats()
+    assert s["speculation"]["predicts"] == \
+        sum(d.stats["spec_predict"] for d in c.devices)
+    assert 0.0 < s["speculation"]["hit_rate"] <= 1.0
+
+
+# -------------------------------------------------- variant lease fan-out ----
+def test_variant_lease_claim_complete_and_waiters(artifact):
+    ws = _ws()
+    svc = ws.service
+    rec = _copy(artifact)
+    lease = svc.variant_lease("campaign-x", ["k/a", "k/b"])
+    assert lease.claim("k/a") is None
+    assert lease.claim("k/b") is None
+    # a second campaign can't double-claim, a plain misser becomes a waiter
+    other = svc.variant_lease("campaign-y", ["k/a"])
+    assert other.claim("k/a") == "leased"
+    got = []
+    t = threading.Thread(target=lambda: got.append(
+        svc.ensure("k/a")))      # no record_fn: must ride the lease
+    t.start()
+    lease.complete("k/a", rec)
+    t.join(timeout=5)
+    assert not t.is_alive() and len(got) == 1
+    assert svc.has("k/a")
+    # published keys are skipped, not re-leased
+    late = svc.variant_lease("campaign-z", ["k/a"])
+    assert late.claim("k/a") == "published"
+    # fail() releases without publishing; waiters surface the miss
+    lease.fail("k/b")
+    assert not svc.has("k/b")
+    with pytest.raises(RegistryMissError):
+        svc.ensure("k/b")
+    assert lease.outstanding() == set()
+
+
+def test_variant_lease_complete_requires_ownership(artifact):
+    ws = _ws()
+    lease = ws.service.variant_lease("c", ["k/x"])
+    with pytest.raises(KeyError, match="not leased"):
+        lease.complete("k/x", _copy(artifact))
+
+
+def test_campaign_failure_releases_leases():
+    """A variant whose compile blows up must not leave its lease (or the
+    other claimed variants') stuck — later missers would deadlock."""
+    ws = _ws()
+
+    def boom():
+        raise RuntimeError("compile exploded")
+
+    v = VariantSpec("broken/key", boom)
+    slot = DeviceSlot("dev0", ws.fresh_netem())
+    c = RecordCampaign([v], [slot], service=ws.service, jobs=6)
+    with pytest.raises(RuntimeError, match="compile exploded"):
+        c.run()
+    assert "broken/key" not in ws.service._leases
+    with pytest.raises(RegistryMissError):
+        ws.service.ensure("broken/key")        # miss, not a hang
