@@ -1,0 +1,208 @@
+"""Attestation benchmark: transparency-log proof scaling, verification
+overhead, split-view detection, and quote round-trip (-> BENCH_attest.json).
+
+Four claims, asserted into the JSON as acceptance flags:
+
+  * proof size is O(log n): across a 1 -> 64 published-entry ladder the
+    longest inclusion audit path never exceeds ceil(log2 n) hashes
+    (``proof_growth_sublinear``);
+  * proof verification is cheap: a warm wifi fetch with inclusion +
+    consistency verification on costs <= 5% more virtual time than the
+    same fetch with verification off (``verify_overhead_le_5pct``);
+  * a forked registry is caught: swapping a published recording for a
+    different validly-signed one raises ``SplitViewError`` before the
+    blob is ever returned (``split_view_detected``);
+  * quotes bind what ran: a replay quote verifies offline through
+    ``repro.attest.verifier`` — which imports no model/registry code
+    (``offline_verifier_no_model_imports``) — and perturbing ANY bound
+    field is rejected.
+"""
+from __future__ import annotations
+
+import json
+import math
+import pickle
+
+import numpy as np
+
+from repro.api import Workspace
+from repro.attest import KeySchedule, verify_quote
+from repro.attest.log import proof_wire_bytes
+from repro.core.attest import (QuoteVerificationError, SplitViewError,
+                               fingerprint)
+from repro.core.recording import Recording
+from repro.core.replay_passes import PlanExecutor, verified_plan
+
+KEY = b"attest-bench-key"
+LADDER = (1, 2, 4, 8, 16, 32, 64)
+
+# the offline verifier must hold nothing a replica could lie about —
+# and import nothing that could (same boundary test_replay pins for the
+# replayer itself)
+FORBIDDEN_VERIFIER_IMPORTS = ("repro.models", "repro.configs",
+                              "repro.training", "repro.serving",
+                              "repro.registry", "repro.record", "jax")
+
+
+def synthetic_recording(payload_bytes: int = 120_000, seed: int = 0,
+                        name: str = "synthetic") -> Recording:
+    """A signed recording with random payload — big enough to chunk,
+    cheap enough to publish 64 of.  ``exec_fingerprint`` is set so
+    ``verified_plan`` accepts it."""
+    rng = np.random.default_rng(seed)
+    payload = rng.bytes(payload_bytes)
+    manifest = {"name": name, "static": {}, "record_wall_s": 2.0,
+                "exec_fingerprint": fingerprint(payload)}
+    return Recording(manifest, payload,
+                     pickle.dumps((None, None))).sign_with(KEY)
+
+
+def proof_ladder() -> list:
+    """Publish 64 entries; at each rung report the WORST-case inclusion
+    audit path over every leaf, against the ceil(log2 n) bound."""
+    ws = Workspace(registry=":memory:", key=KEY, net="wifi")
+    svc = ws.service
+    rows = []
+    published = 0
+    for n in LADDER:
+        while published < n:
+            svc.publish(f"ladder/e{published}",
+                        synthetic_recording(4_000, seed=published,
+                                            name=f"e{published}"))
+            published += 1
+        worst = max(len(svc.log.inclusion_proof(i, n)) for i in range(n))
+        rows.append({"entries": n, "proof_hashes": worst,
+                     "proof_wire_bytes": proof_wire_bytes(["x" * 64] * worst),
+                     "log2_bound": math.ceil(math.log2(n)) if n > 1 else 0})
+    return rows
+
+
+def verify_overhead() -> dict:
+    """Warm wifi fetch, verification on vs off — fresh netem per arm so
+    the spans never alias.  Proof bytes ride the async billing path (no
+    blocking round trip), so the overhead is bandwidth-only."""
+    ws = Workspace(registry=":memory:", key=KEY, net="wifi")
+    reg_key = "overhead/prefill"
+    ws.service.publish(reg_key, synthetic_recording())
+    # prime: first fetch pays any record-side costs; both arms then warm
+    ws.new_client(netem=ws.fresh_netem()).fetch(reg_key)
+
+    net_off = ws.fresh_netem()
+    ws.new_client(netem=net_off, verify_proofs=False).fetch(reg_key)
+    net_on = ws.fresh_netem()
+    cl = ws.new_client(netem=net_on, verify_proofs=True)
+    cl.fetch(reg_key)
+    t_off, t_on = net_off.virtual_time_s, net_on.virtual_time_s
+    return {"warm_fetch_unverified_s": round(t_off, 6),
+            "warm_fetch_verified_s": round(t_on, 6),
+            "overhead_pct": round(100.0 * (t_on - t_off) / t_off, 3),
+            "proof_bytes": int(cl.stats["proof_bytes"]),
+            "proofs_verified": int(cl.stats["proofs_verified"])}
+
+
+def split_view() -> dict:
+    """The attack the log exists for: after publish, the registry swaps
+    in a DIFFERENT validly-signed recording under the same key.  HMAC
+    passes; the transparency log does not — the client must raise
+    ``SplitViewError`` instead of returning the swapped bytes."""
+    from repro.registry.service import recording_to_parts
+    ws = Workspace(registry=":memory:", key=KEY, net="wifi")
+    reg_key = "victim/prefill"
+    ws.service.publish(reg_key, synthetic_recording(seed=1))
+    old_meta = ws.store.entry(reg_key)["meta"]
+    evil = synthetic_recording(seed=2, name="evil")  # signed, wrong bytes
+    ws.store.put(reg_key, recording_to_parts(evil, ws.store.chunk_size),
+                 meta=old_meta)
+    try:
+        ws.new_client(netem=ws.fresh_netem()).fetch(reg_key)
+        return {"detected": False, "error": None}
+    except SplitViewError as e:
+        return {"detected": True, "error": str(e)[:120]}
+
+
+def quote_roundtrip() -> dict:
+    """Replay through a verified plan, quote it, verify the quote fully
+    offline; then perturb each bound field in turn — every perturbation
+    must be rejected."""
+    ws = Workspace(registry=":memory:", key=KEY, net="wifi")
+    reg_key = "quoted/prefill"
+    ws.service.publish(reg_key, synthetic_recording(seed=3))
+    blob = ws.client.fetch(reg_key)
+    plan, _rec = verified_plan(blob, KEY, "all", jobs=8)
+    ex = PlanExecutor(netem=ws.fresh_netem())
+    ex.run(plan)
+    head = ws.service.signed_head()
+    quote = ex.quote(ws.keys, recording_key=reg_key, head=head)
+    bundle = ws.service.proof_for(reg_key)
+
+    offline = KeySchedule(KEY)   # remote party: shared root secret only
+    report = verify_quote(quote, head=head, keys=offline,
+                          leaf=bundle["leaf"], proof=bundle["path"],
+                          leaf_index=bundle["index"])
+
+    from repro.attest.quote import BOUND_FIELDS
+    rejected = []
+    for field in BOUND_FIELDS:
+        bad = dict(quote)
+        bad[field] = 999 if isinstance(quote[field], int) \
+            else quote[field] + "x" if isinstance(quote[field], str) \
+            else "tampered"
+        try:
+            verify_quote(bad, head=head, keys=offline, leaf=bundle["leaf"],
+                         proof=bundle["path"], leaf_index=bundle["index"])
+        except QuoteVerificationError:
+            rejected.append(field)
+    return {"bound_fields": list(BOUND_FIELDS),
+            "perturbations_rejected": rejected,
+            "inclusion_checked": report["inclusion_checked"],
+            "epoch": report["epoch"]}
+
+
+def verifier_is_model_free() -> bool:
+    import repro.attest.verifier as V
+    src = open(V.__file__).read()
+    return not any(f"import {m}" in src or f"from {m}" in src
+                   for m in FORBIDDEN_VERIFIER_IMPORTS)
+
+
+def main(quick: bool = False, out_json: str = "BENCH_attest.json"):
+    ladder = proof_ladder()
+    overhead = verify_overhead()
+    sview = split_view()
+    quote = quote_roundtrip()
+    offline_clean = verifier_is_model_free()
+    summary = {
+        "proof_ladder": ladder,
+        "verify_overhead": overhead,
+        "split_view": sview,
+        "quote": quote,
+        "proof_growth_sublinear":
+            all(r["proof_hashes"] <= r["log2_bound"] for r in ladder),
+        "verify_overhead_le_5pct": overhead["overhead_pct"] <= 5.0,
+        "split_view_detected": sview["detected"],
+        "quote_all_perturbations_rejected":
+            quote["perturbations_rejected"] == quote["bound_fields"],
+        "offline_verifier_no_model_imports": offline_clean,
+    }
+    with open(out_json, "w") as f:
+        json.dump(summary, f, indent=1)
+    rows = [{"label": f"proof_n{r['entries']}",
+             "value": r["proof_hashes"],
+             "derived": f"wireB={r['proof_wire_bytes']};"
+                        f"bound={r['log2_bound']}"} for r in ladder]
+    rows.append({"label": "verify_overhead",
+                 "value": overhead["overhead_pct"],
+                 "derived": f"proofB={overhead['proof_bytes']};"
+                            f"le_5pct={summary['verify_overhead_le_5pct']}"})
+    rows.append({"label": "split_view", "value": int(sview["detected"]),
+                 "derived": "detected" if sview["detected"] else "MISSED"})
+    rows.append({"label": "quote", "value":
+                 len(quote["perturbations_rejected"]),
+                 "derived": f"bound={len(quote['bound_fields'])};"
+                            f"offline_clean={offline_clean}"})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

@@ -131,8 +131,8 @@ def bench_arch(arch: str, iters: int = 30) -> dict:
 
 # --------------------------------------------------------- plan ablation --
 def _digest(tree) -> str:
-    return fingerprint([np.asarray(x).tobytes()
-                        for x in jax.tree.leaves(tree)])
+    return fingerprint(*[np.asarray(x).tobytes()
+                         for x in jax.tree.leaves(tree)])
 
 
 def _dispatch_delay(rp: Replayer, name: str, args, calls: int,

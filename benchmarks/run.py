@@ -74,6 +74,14 @@ def _fanout_section(quick: bool):
               f"hit={r['spec_hit_rate']};bit_exact={r['bit_exact']}")
 
 
+def _attest_section(quick: bool):
+    _section("Attestation: proof scaling + verify overhead + split-view "
+             "+ quote round-trip (-> BENCH_attest.json)")
+    from benchmarks import attest_bench
+    for r in attest_bench.main(quick=quick):
+        print(f"attest_{r['label']},{r['value']},{r['derived']}")
+
+
 def _replay_section(quick: bool):
     _section("Replay vs native + replay-plan compaction ablation "
              "(-> BENCH_replay.json)")
@@ -100,11 +108,12 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: decode pipeline + multitenant + registry "
-                         "+ recording-ablation + replay + fleet + fanout "
-                         "benches only, emit BENCH_decode.json + "
+                         "+ recording-ablation + replay + fleet + fanout + "
+                         "attest benches only, emit BENCH_decode.json + "
                          "BENCH_multitenant.json + BENCH_registry.json + "
                          "BENCH_recording.json + BENCH_replay.json + "
-                         "BENCH_fleet.json + BENCH_fanout.json")
+                         "BENCH_fleet.json + BENCH_fanout.json + "
+                         "BENCH_attest.json")
     args = ap.parse_args()
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -117,6 +126,7 @@ def main() -> None:
         _replay_section(quick=True)
         _fleet_section(quick=True)
         _fanout_section(quick=True)
+        _attest_section(quick=True)
         print(f"\n# total bench wall time: {time.time()-t0:.1f}s")
         return
 
@@ -127,6 +137,7 @@ def main() -> None:
     _replay_section(quick=args.quick)
     _fleet_section(quick=args.quick)
     _fanout_section(quick=args.quick)
+    _attest_section(quick=args.quick)
 
     _section("Paper Fig.7 + Table 1: recording delays (emulated networks)")
     from benchmarks import record_replay

@@ -6,6 +6,9 @@
      verified BEFORE any unpickle, no model code / compiler in the TCB —
      and serves a private prompt BIT-EXACTLY vs live execution.
   3. An adversary tampers with the fetched recording -> rejected.
+  4. The TEE checks the registry's TRANSPARENCY LOG: the fetched bytes
+     are committed under a signed Merkle root (inclusion proof), so even
+     a validly-signed swap by a compromised registry is caught.
 
     PYTHONPATH=src python examples/secure_inference.py
 """
@@ -46,3 +49,15 @@ if __name__ == "__main__":
             print("!!! tampering NOT detected")
         except TamperedRecordingError as e:
             print(f"tampering rejected by the TEE: {e}")
+        print("=== 4. transparency: fetched bytes are in the signed log ===")
+        from repro.attest import leaf_data, verify_inclusion
+        from repro.attest.verifier import head_signable
+        bundle = ws.service.proof_for(wl.key("decode"))
+        head, leaf = bundle["head"], bundle["leaf"]
+        assert ws.keys.verify(head_signable(head), head["signature"])
+        assert verify_inclusion(
+            leaf_data(leaf["key"], leaf["manifest_fp"],
+                      leaf["payload_digest"], leaf["epoch"]),
+            bundle["index"], head["size"], bundle["path"], head["root"])
+        print(f"inclusion proof ok: leaf {bundle['index']} of "
+              f"{head['size']} under signed root {head['root'][:16]}...")

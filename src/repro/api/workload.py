@@ -242,6 +242,32 @@ class Workload:
         self.replays.append((kind, rep))
         return rep
 
+    def attested_replay(self, kind: str = "prefill", *, passes=None,
+                        jobs: Optional[int] = None,
+                        record_on_miss: bool = False):
+        """The end-to-end attested lifecycle leg: proof-verified registry
+        fetch (inclusion + consistency against the signed root), verified
+        replay-plan execution, and a signed QUOTE binding what ran to
+        what was published.  Returns ``(report, quote, proof_bundle)`` —
+        the quote + bundle verify offline via
+        ``repro.attest.verifier.verify_quote`` with no model or registry
+        imports on the verifier side."""
+        from repro.core.replay_passes import PlanExecutor, verified_plan
+        reg_key = self.key(kind)
+        record_fn = self._record_fn(kind, reg_key) if record_on_miss \
+            else None
+        blob = self.ws.client.fetch(reg_key, record_fn=record_fn)
+        passes = self.ws.replay_passes if passes is None else passes
+        plan, _rec = verified_plan(blob, self.ws.key, passes, jobs=jobs)
+        ex = PlanExecutor(netem=self.ws.fresh_netem(), tracer=self.ws.tracer)
+        rep = ex.run(plan)
+        self.replays.append((kind, rep))
+        head = self.ws.service.signed_head()
+        quote = ex.quote(self.ws.keys, recording_key=reg_key, head=head)
+        bundle = self.ws.service.proof_for(reg_key)
+        self.ws.quotes.append(quote)
+        return rep, quote, bundle
+
     # ------------------------------------------------------------ registry --
     def publish(self, rec: Recording, key: Optional[str] = None) -> dict:
         """Publish into the workspace registry under the canonical key

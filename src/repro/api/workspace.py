@@ -13,7 +13,9 @@ from __future__ import annotations
 
 from typing import Optional, Union
 
+from repro.attest import EpochKey, KeySchedule
 from repro.configs import get_config, smoke_shrink
+from repro.core.attest import RotatedKeyError
 from repro.core.netem import PROFILES, NetProfile, NetworkEmulator
 from repro.obs.metrics import Metrics
 from repro.obs.trace import NULL, Tracer
@@ -52,18 +54,38 @@ class Workspace:
     verifies every recording that crosses the registry boundary."""
 
     def __init__(self, registry: Union[None, str, bool] = None, *,
-                 key: bytes = b"", net: _Net = None,
+                 key: Union[bytes, KeySchedule, EpochKey] = b"",
+                 net: _Net = None,
                  record_passes="all", replay_passes="all",
                  trace: Union[bool, Tracer] = False,
                  store_cache_bytes: int = 8 << 20):
         if registry is False or registry == "":
             registry = None       # falsy spellings of "no registry"
+        # the workspace owns the attestation key schedule (per-epoch
+        # signing-key rotation).  ``key`` accepts the raw root secret, a
+        # shared KeySchedule, or an EpochKey credential — but NEVER a
+        # rotated-away epoch's key: a stale credential must fail loudly
+        # at construction, not produce unverifiable signatures later.
+        if isinstance(key, EpochKey):
+            if key.stale:
+                raise RotatedKeyError(
+                    f"epoch-{key.epoch} key was rotated away (schedule is "
+                    f"at epoch {key.schedule.epoch}); build the Workspace "
+                    "from the KeySchedule or the current epoch's key")
+            self.keys: Optional[KeySchedule] = key.schedule
+            key = key.schedule.root
+        elif isinstance(key, KeySchedule):
+            self.keys = key
+            key = key.root
+        else:
+            self.keys = KeySchedule(key) if key else None
         if registry is not None and not key:
             raise ValueError(
                 "Workspace with a registry requires the signing key: "
                 "recordings are verified before any unpickle, so an "
                 "unkeyed registry workspace could never fetch safely")
         self.key = key
+        self.quotes = []          # replay attestation quotes emitted
         self.registry = registry
         self.netem = _resolve_net(net)
         self.record_passes = record_passes
@@ -128,7 +150,8 @@ class Workspace:
             self._service = RegistryService(
                 self.store, signing_key=self.key,
                 record_profile=self.profile,
-                record_passes=self.record_passes, tracer=self.tracer)
+                record_passes=self.record_passes, tracer=self.tracer,
+                keys=self.keys)
         return self._service
 
     @property
@@ -146,11 +169,14 @@ class Workspace:
         return self._client
 
     def new_client(self, netem: Optional[NetworkEmulator] = None, *,
-                   region: Optional[str] = None) -> RegistryClient:
+                   region: Optional[str] = None,
+                   verify_proofs: bool = True) -> RegistryClient:
         """A fresh client against this workspace's service (its own
         fetch cache; optionally its own emulator).  With ``region`` the
         client reads through that region's read-replica instead of the
         primary, so its chunk traffic is absorbed by the regional cache.
+        ``verify_proofs=False`` opts out of transparency-log proof
+        verification (the overhead benchmark's baseline arm).
 
         Each call returns a FULLY independent client — its own ``stats``
         counter and its own chunk LRU — so per-replica billing spans
@@ -160,7 +186,8 @@ class Workspace:
         return RegistryClient(svc,
                               netem=netem if netem is not None
                               else self.netem, key=self.key,
-                              tracer=self.tracer)
+                              tracer=self.tracer, keys=self.keys,
+                              verify_proofs=verify_proofs)
 
     def read_replica(self, region: str) -> RegistryReadReplica:
         """The (memoized) read-replica for ``region``: a regional chunk
@@ -170,6 +197,16 @@ class Workspace:
             self._read_replicas[region] = RegistryReadReplica(
                 self.service, region=region, metrics=self.metrics)
         return self._read_replicas[region]
+
+    # -------------------------------------------------------- attestation --
+    def rotate_epoch(self) -> int:
+        """Advance the signing-key schedule one epoch.  Heads and quotes
+        signed from now on carry the new epoch; everything published in
+        older epochs stays verifiable (the schedule keeps its history)."""
+        if self.keys is None:
+            raise ValueError("Workspace has no key schedule to rotate "
+                             "(construct with key=...)")
+        return self.keys.rotate()
 
     # ------------------------------------------------------------- record --
     def session(self, passes=None, jobs: Optional[int] = None
@@ -373,6 +410,22 @@ class Workspace:
             "fleet": [p.stats() for p in self.fleets],
             "campaigns": [c.stats() for c in self.campaigns],
             "registry_store": self._registry_store_stats(),
+            "attest": self._attest_stats(),
+        }
+
+    def _attest_stats(self) -> dict:
+        """Attestation accounting: key-schedule epoch, transparency-log
+        head, client proof verifications, quotes emitted."""
+        cl = self._client.stats if self._client is not None else {}
+        return {
+            "epoch": self.keys.epoch if self.keys is not None else None,
+            "log_size": self._service.log.size
+            if self._service is not None else 0,
+            "root": self._service.log.root()
+            if self._service is not None else None,
+            "quotes": len(self.quotes),
+            "proofs_verified": int(cl.get("proofs_verified", 0)),
+            "proof_bytes": int(cl.get("proof_bytes", 0)),
         }
 
     def _registry_store_stats(self) -> dict:

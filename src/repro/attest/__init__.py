@@ -1,0 +1,41 @@
+"""repro.attest — transparency log + key rotation + replay attestation.
+
+The end-to-end trust chain over the record -> publish -> fetch -> replay
+lifecycle (ROADMAP "attested replay"; SAGE / CT-style design):
+
+    log.py       RFC 6962/9162 Merkle tree over the registry index:
+                 signed tree heads, inclusion + consistency proofs
+    keys.py      per-epoch signing keys (HKDF-style ratchet), owned by
+                 ``Workspace``; old epochs verifiable, future rejected
+    quote.py     replay quotes binding (recording key, executable
+                 fingerprint, plan fingerprint, commit-frontier digest,
+                 signed root)
+    verifier.py  OFFLINE quote verification — imports no model/registry
+                 code (tested by source scan)
+
+``RegistryService`` appends a leaf per publish and serves proofs;
+``RegistryClient`` / ``RegistryReadReplica`` verify inclusion +
+consistency before trusting fetched bytes (``SplitViewError`` on a
+silently swapped recording or forked log, BEFORE any unpickle).
+"""
+from repro.core.attest import (AttestationError, FutureEpochError,
+                               QuoteVerificationError, RotatedKeyError,
+                               SplitViewError)
+from repro.attest.keys import EpochKey, KeySchedule
+from repro.attest.log import (TransparencyLog, leaf_data, leaf_hash,
+                              proof_wire_bytes, verify_consistency,
+                              verify_inclusion)
+from repro.attest.quote import (BOUND_FIELDS, build_quote,
+                                frontier_digest_of, plan_fingerprint_of,
+                                quote_signable)
+from repro.attest.verifier import head_signable, verify_head, verify_quote
+
+__all__ = [
+    "AttestationError", "BOUND_FIELDS", "EpochKey", "FutureEpochError",
+    "KeySchedule", "QuoteVerificationError", "RotatedKeyError",
+    "SplitViewError", "TransparencyLog", "build_quote",
+    "frontier_digest_of", "head_signable", "leaf_data", "leaf_hash",
+    "plan_fingerprint_of", "proof_wire_bytes", "quote_signable",
+    "verify_consistency", "verify_head", "verify_inclusion",
+    "verify_quote",
+]

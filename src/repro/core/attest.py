@@ -1,5 +1,12 @@
 """Signing / fingerprints for recordings (paper §3.2: the cloud signs
-recordings; the TEE replayer only accepts signed ones)."""
+recordings; the TEE replayer only accepts signed ones).
+
+``repro.attest`` builds on these primitives: epoch-rotated signing keys
+(``repro.attest.keys``), the registry transparency log
+(``repro.attest.log``), and replay quotes (``repro.attest.quote``).  The
+attest-level error taxonomy lives HERE so the offline verifier and the
+registry can share it without importing each other.
+"""
 from __future__ import annotations
 
 import hashlib
@@ -7,13 +14,32 @@ import hmac
 import json
 
 
+def _reject_unknown(obj):
+    """Strict ``json.dumps`` default: refuse to fingerprint types the
+    canonical encoding does not cover.  The old ``default=str`` fallback
+    silently collapsed distinct objects with equal ``str()`` into ONE
+    fingerprint — an identity collision, which for registry keys means
+    two different recordings sharing a key."""
+    raise TypeError(
+        f"fingerprint: no canonical encoding for {type(obj).__name__!r} "
+        f"({obj!r}); pass JSON-clean values (dict/list/str/int/float/bool/"
+        "None) or raw bytes")
+
+
+def canonical(part) -> bytes:
+    """The canonical byte encoding one fingerprinted part hashes as:
+    raw bytes pass through, everything else must be JSON-clean (strict —
+    unknown types raise ``TypeError`` instead of str()-collapsing)."""
+    if isinstance(part, bytes):
+        return part
+    return json.dumps(part, sort_keys=True,
+                      default=_reject_unknown).encode()
+
+
 def fingerprint(*parts) -> str:
     h = hashlib.sha256()
     for p in parts:
-        if isinstance(p, bytes):
-            h.update(p)
-        else:
-            h.update(json.dumps(p, sort_keys=True, default=str).encode())
+        h.update(canonical(p))
     return h.hexdigest()
 
 
@@ -39,3 +65,33 @@ class UnverifiedRecordingError(ValueError):
 class TopologyMismatchError(Exception):
     """Replay on hardware that does not match the recording (paper §2.4:
     recordings are only valid for the exact GPU/mesh they were made for)."""
+
+
+class AttestationError(TamperedRecordingError):
+    """A transparency-log / attestation check failed.  Subclasses
+    ``TamperedRecordingError`` so every existing catch-site that treats a
+    failed integrity check as tampering keeps working unchanged."""
+
+
+class SplitViewError(AttestationError):
+    """The registry served bytes the transparency log does not vouch for:
+    a silently swapped recording, a forked (split-view) log, or an
+    unverifiable signed tree head.  Raised by clients BEFORE the fetched
+    bytes can reach any ``pickle.loads``."""
+
+
+class QuoteVerificationError(AttestationError):
+    """A replay attestation quote failed offline verification (bad
+    signature, unbound field, or a root the verifier does not trust)."""
+
+
+class FutureEpochError(AttestationError):
+    """A signature claims a key epoch that does not exist yet — either a
+    forged epoch tag or a verifier whose key schedule is behind the
+    signer's (which must surface, not silently fail verification)."""
+
+
+class RotatedKeyError(ValueError):
+    """A raw epoch key from an already-rotated-away epoch was offered
+    where a current credential is required (e.g. ``Workspace(key=...)``
+    with a stale ``EpochKey``)."""

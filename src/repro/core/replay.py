@@ -184,6 +184,26 @@ class Replayer:
             self.stats["executions"] += 1
         return name
 
+    def quote(self, keys, name: str, *, head: dict,
+              recording_key: Optional[str] = None) -> dict:
+        """Replay attestation quote for a LOADED recording: binds the
+        registry key, the verified executable fingerprint, and how many
+        executions this replayer has served, against the signed tree head
+        the recording was fetched under.  (Plan-level replays quote
+        through ``PlanExecutor.quote`` instead, which additionally binds
+        the compacted plan and the committed write frontier.)"""
+        from repro.attest.quote import build_quote
+        from repro.core.attest import fingerprint as fp
+        manifests = self.manifests(name)
+        exec_fp = manifests[0].get("exec_fingerprint", "")
+        return build_quote(
+            keys, recording_key=recording_key or name,
+            exec_fingerprint=exec_fp, plan_fingerprint="",
+            frontier_digest=fp({"executions": self.stats["executions"],
+                                "loads": self.stats["loads"]}),
+            head=head,
+            annotations={"variants": len(self._loaded[name])})
+
     @staticmethod
     def _describe(sig) -> str:
         short = [f"{dt}{list(shape)}" for shape, dt in sig[:6]]

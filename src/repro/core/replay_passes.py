@@ -292,6 +292,7 @@ class PlanExecutor:
         self.q = CommitQueue(self.device.channel, netem=netem,
                              name="replay-plan")
         self._ran = False
+        self._plan: Optional[ReplayPlan] = None
 
     def run(self, plan: ReplayPlan) -> dict:
         from repro.obs.trace import traced
@@ -299,6 +300,7 @@ class PlanExecutor:
             raise RuntimeError("PlanExecutor is single-use: build a new "
                                "executor per replayed plan")
         self._ran = True
+        self._plan = plan
         mark = self.netem.checkpoint() if self.netem else None
         q = self.q
         tr = self.tracer
@@ -338,6 +340,28 @@ class PlanExecutor:
                     q.commit()
         totals = self.netem.delta(mark) if mark is not None else {}
         return self._report(plan, totals)
+
+    # ---------------------------------------------------------- attestation --
+    def quote(self, keys, *, recording_key: str, head: dict) -> dict:
+        """Emit a replay attestation quote for the plan this executor
+        ran: binds the recording key, the source executable fingerprint,
+        the compacted plan's identity, the committed write frontier, and
+        the signed tree head the recording was fetched under.  Offline-
+        verifiable via ``repro.attest.verifier.verify_quote``."""
+        from repro.attest.quote import (build_quote, frontier_digest_of,
+                                        plan_fingerprint_of)
+        if not self._ran or self._plan is None:
+            raise RuntimeError("quote() before run(): a quote attests an "
+                               "executed replay, not an intention")
+        return build_quote(
+            keys, recording_key=recording_key,
+            exec_fingerprint=self._plan.source_fingerprint,
+            plan_fingerprint=plan_fingerprint_of(self._plan),
+            frontier_digest=frontier_digest_of(self.write_log()),
+            head=head,
+            annotations={"passes": list(self._plan.passes),
+                         "dispatches": len(self._plan.groups),
+                         "writes": len(self.write_log())})
 
     # ----------------------------------------------------------- inspection --
     def write_log(self) -> List[tuple]:

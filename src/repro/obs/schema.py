@@ -73,6 +73,8 @@ CAMPAIGN_KEYS = ("name", "devices", "variants", "recorded",
                  "artifact_reuses", "speculation", "per_device")
 CAMPAIGN_DEVICE_KEYS = ("name", "hw_class", "net", "recorded",
                         "busy_virtual_s", "blocking_round_trips", "spec")
+ATTEST_KEYS = ("epoch", "log_size", "root", "quotes", "proofs_verified",
+               "proof_bytes")
 
 
 def check_histogram_summary(s: dict, where: str = "histogram") -> dict:
@@ -108,7 +110,7 @@ def check_registry_store_stats(s: dict,
         _require(s["cache"], CACHE_KEYS, f"{where}.cache")
     for rr in s["read_replicas"]:
         _require(rr, ("region", "chunk_pulls", "chunk_pull_bytes",
-                      "ensure_passthrough", "cache"),
+                      "ensure_passthrough", "proofs_relayed", "cache"),
                  f"{where}.read_replicas[{rr.get('region')}]")
         _require(rr["cache"], CACHE_KEYS,
                  f"{where}.read_replicas[{rr.get('region')}].cache")
@@ -132,8 +134,10 @@ def check_workspace_report(rep: dict) -> dict:
     """Validate the full ``Workspace.report()`` shape; returns ``rep``."""
     _require(rep, ("net", "registry_client", "registry_service", "sessions",
                    "replays", "replayer_stats", "metrics", "schedulers",
-                   "fleet", "campaigns", "registry_store"),
+                   "fleet", "campaigns", "registry_store", "attest"),
              "report")
+    if rep["attest"] is not None:
+        _require(rep["attest"], ATTEST_KEYS, "report.attest")
     if rep["net"] is not None:
         _require(rep["net"], NET_KEYS, "report.net")
     for i, s in enumerate(rep["sessions"]):
@@ -241,6 +245,25 @@ def _check_decode(d: dict) -> None:
     _flags(d, ("identical_streams_across_depths",), "decode")
 
 
+def _check_attest(d: dict) -> None:
+    _require(d, ("proof_ladder", "verify_overhead", "split_view", "quote"),
+             "attest")
+    if len(d["proof_ladder"]) < 3:
+        raise SchemaError("attest: need a >= 3-rung proof-size ladder, got "
+                          f"{len(d['proof_ladder'])}")
+    for row in d["proof_ladder"]:
+        _require(row, ("entries", "proof_hashes", "proof_wire_bytes",
+                       "log2_bound"), f"attest.proof_ladder[{row.get('entries')}]")
+    _require(d["verify_overhead"], ("warm_fetch_unverified_s",
+                                    "warm_fetch_verified_s", "overhead_pct",
+                                    "proof_bytes"), "attest.verify_overhead")
+    _require(d["quote"], ("bound_fields", "perturbations_rejected"),
+             "attest.quote")
+    _flags(d, ("split_view_detected", "verify_overhead_le_5pct",
+               "offline_verifier_no_model_imports",
+               "proof_growth_sublinear"), "attest")
+
+
 def _check_trace(d: dict) -> None:
     _require(d, ("traceEvents",), "trace")
     if not isinstance(d["traceEvents"], list) or not d["traceEvents"]:
@@ -255,6 +278,7 @@ BENCH_CHECKS = {
     "BENCH_decode.json": _check_decode,
     "BENCH_fleet.json": _check_fleet,
     "BENCH_fanout.json": _check_fanout,
+    "BENCH_attest.json": _check_attest,
 }
 
 

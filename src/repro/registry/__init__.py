@@ -17,7 +17,7 @@ naming schemes).
 """
 from __future__ import annotations
 
-from repro.core.attest import fingerprint
+from repro.core.attest import SplitViewError, fingerprint
 from repro.registry.client import FetchInterrupted, RegistryClient
 from repro.registry.replica import RegistryReadReplica
 from repro.registry.service import (RegistryService, VariantLeaseSet,
@@ -50,6 +50,6 @@ def key_for(arch: str, kind: str, shapes, mesh_fp: str) -> str:
 __all__ = [
     "FetchInterrupted", "LRUBytes", "RecordingStore", "RegistryClient",
     "RegistryIntegrityError", "RegistryMissError", "RegistryReadReplica",
-    "RegistryService", "VariantLeaseSet", "key_arch", "key_for",
-    "parts_to_recording_bytes", "recording_to_parts",
+    "RegistryService", "SplitViewError", "VariantLeaseSet", "key_arch",
+    "key_for", "parts_to_recording_bytes", "recording_to_parts",
 ]

@@ -19,13 +19,22 @@ missing remainder.
 Security: the client verifies the recording HMAC (``Recording.from_bytes``
 with a key — never ``allow_unsigned``) BEFORE the bytes can reach any
 ``pickle.loads``; the store additionally re-verifies every chunk digest
-and the signed index on each read.
+and the signed index on each read.  On top of that, every fetch demands
+a transparency-log INCLUSION proof (the fetched bytes are the published
+bytes, committed under a signed tree head) and a CONSISTENCY proof
+against the head pinned on the previous fetch (the log only ever grew) —
+``SplitViewError`` on a silent swap or forked log, still pre-unpickle.
 """
 from __future__ import annotations
 
 import collections
 from typing import Callable, Dict, Iterable, List, Optional, Tuple, Union
 
+from repro.attest.keys import KeySchedule
+from repro.attest.log import (PROOF_HASH_BYTES, leaf_data, proof_wire_bytes,
+                              verify_consistency, verify_inclusion)
+from repro.attest.verifier import head_signable
+from repro.core.attest import FutureEpochError, SplitViewError, fingerprint
 from repro.core.recording import Recording
 from repro.obs.trace import NULL, traced
 from repro.registry.service import RegistryService, parts_to_recording_bytes
@@ -43,7 +52,9 @@ class FetchInterrupted(RuntimeError):
 
 class RegistryClient:
     def __init__(self, service: RegistryService, netem=None, *, key: bytes,
-                 cache_bytes: int = 32 << 20, tracer=None):
+                 cache_bytes: int = 32 << 20, tracer=None,
+                 keys: Optional[KeySchedule] = None,
+                 verify_proofs: bool = True):
         if not key:
             raise ValueError("RegistryClient requires the registry signing "
                              "key: fetched bytes are verified before use")
@@ -53,6 +64,14 @@ class RegistryClient:
         self.tracer = tracer if tracer is not None else NULL
         self.chunks = LRUBytes(cache_bytes)   # digest -> raw chunk
         self.stats = collections.Counter()
+        # transparency-log verification: the client pins the last signed
+        # tree head it accepted and demands (inclusion + consistency)
+        # proofs on every fetch.  ``keys`` shares the Workspace's epoch
+        # schedule; a bare client derives one from the signing key (same
+        # derivation the service uses, so epoch 0 agrees by construction)
+        self._keys = keys if keys is not None else KeySchedule(key)
+        self._verify_proofs = verify_proofs
+        self._sth: Optional[dict] = None      # pinned {size, root}
 
     # ---------------------------------------------------------- internals --
     def _bill_index_rpc(self, n_chunks: int):
@@ -176,12 +195,76 @@ class RegistryClient:
         blob = parts_to_recording_bytes(
             {p: b"".join(pieces) for p, pieces in parts.items()})
         # HMAC verification BEFORE the blob can reach pickle.loads anywhere
-        Recording.from_bytes(blob, self._key)
+        rec = Recording.from_bytes(blob, self._key)
+        # ... and transparency-log verification before the bytes are
+        # TRUSTED: inclusion of exactly these bytes under a signed root,
+        # consistency of that root with the head pinned on the previous
+        # fetch.  A silently swapped recording or a forked log raises
+        # SplitViewError here — still before any unpickle.
+        if self._verify_proofs and hasattr(self._svc, "proof_for"):
+            self._verify_published(key, rec)
         self.stats["verified_fetches"] += 1
         if self.tracer:
             self.tracer.instant("registry.verified", "registry", key=key,
                                 bytes=len(blob))
         return blob
+
+    def _verify_published(self, key: str, rec: Recording) -> None:
+        """Verify the fetched recording against the transparency log:
+        signed head -> leaf == fetched bytes -> inclusion -> consistency
+        with the pinned head.  Proof bytes are billed as ASYNC wire bytes
+        (they piggyback on the chunk stream; no extra blocking RTT — the
+        <=5% warm-fetch overhead gate depends on this)."""
+        bundle = self._svc.proof_for(key)
+        head, leaf = bundle["head"], bundle["leaf"]
+        try:
+            head_ok = self._keys.verify(head_signable(head),
+                                        head["signature"])
+        except FutureEpochError as e:
+            raise SplitViewError(f"tree head for '{key}': {e}")
+        if not head_ok:
+            raise SplitViewError(
+                f"signed tree head for '{key}' does not verify under the "
+                "epoch key schedule")
+        if (leaf["key"] != key
+                or leaf["manifest_fp"] != fingerprint(rec.manifest)
+                or leaf["payload_digest"] != fingerprint(rec.payload)):
+            raise SplitViewError(
+                f"registry served bytes for '{key}' that do not match its "
+                "published log leaf: silent recording swap detected")
+        data = leaf_data(leaf["key"], leaf["manifest_fp"],
+                         leaf["payload_digest"], leaf["epoch"])
+        if not verify_inclusion(data, bundle["index"], head["size"],
+                                bundle["path"], head["root"]):
+            raise SplitViewError(
+                f"inclusion proof for '{key}' does not fold up to the "
+                "signed root")
+        cons_hashes = 0
+        if self._sth is not None and self._sth["size"] > 0:
+            old_size, old_root = self._sth["size"], self._sth["root"]
+            if head["size"] < old_size:
+                raise SplitViewError(
+                    f"log shrank from {old_size} to {head['size']} "
+                    "entries: append-only violation")
+            cp = self._svc.consistency_between(old_size, head["size"])
+            if not verify_consistency(old_size, old_root, head["size"],
+                                      head["root"], cp["proof"]):
+                raise SplitViewError(
+                    f"consistency proof {old_size} -> {head['size']} "
+                    "failed: the registry is serving a forked (split-view) "
+                    "log")
+            cons_hashes = len(cp["proof"])
+        self._sth = {"size": head["size"], "root": head["root"]}
+        pb = proof_wire_bytes(bundle["path"]) + \
+            cons_hashes * PROOF_HASH_BYTES
+        if self._net is not None:
+            self._net.async_trip(send_bytes=0, recv_bytes=pb)
+        self.stats["proof_bytes"] += pb
+        self.stats["proofs_verified"] += 1
+        if self.tracer:
+            self.tracer.instant("registry.proof_verified", "registry",
+                                key=key, log_size=head["size"],
+                                proof_bytes=pb)
 
     def into_channel(self, replayer, prefill_item, decode_item,
                      warm: bool = True):

@@ -22,7 +22,10 @@ never bad replay bytes.
 from __future__ import annotations
 
 import collections
+from typing import Optional
 
+from repro.attest.log import verify_consistency
+from repro.core.attest import SplitViewError
 from repro.registry.service import RegistryService
 from repro.registry.store import (LRUBytes, RegistryIntegrityError,
                                   chunk_digest)
@@ -37,6 +40,7 @@ class RegistryReadReplica:
         self.region = region
         self.cache = LRUBytes(cache_bytes, metrics=metrics, region=region)
         self.stats = collections.Counter()
+        self._sth: Optional[dict] = None    # region-pinned {size, root}
 
     # ----------------------------------------------- read-path overrides --
     def read_chunk(self, digest: str) -> bytes:
@@ -73,12 +77,45 @@ class RegistryReadReplica:
         self.stats["ensure_passthrough"] += 1
         return self._primary.ensure(key, record_fn)
 
+    # --------------------------------------------------- transparency log --
+    @property
+    def keys(self):
+        return self._primary.keys
+
+    def proof_for(self, key: str) -> dict:
+        """Relay the primary's proof bundle, CROSS-CHECKING it against the
+        replica's own pinned tree head first: a primary that shows one
+        log to region A and another to region B (a split view across
+        regions) is caught at the replica, before any client in the
+        region sees the forked head."""
+        bundle = self._primary.proof_for(key)
+        head = bundle["head"]
+        if self._sth is not None and self._sth["size"] > 0:
+            old_size, old_root = self._sth["size"], self._sth["root"]
+            if head["size"] < old_size:
+                raise SplitViewError(
+                    f"primary log shrank ({old_size} -> {head['size']}) "
+                    f"behind region '{self.region}'")
+            cp = self._primary.consistency_between(old_size, head["size"])
+            if not verify_consistency(old_size, old_root, head["size"],
+                                      head["root"], cp["proof"]):
+                raise SplitViewError(
+                    f"primary served region '{self.region}' a forked log: "
+                    f"consistency {old_size} -> {head['size']} failed")
+        self._sth = {"size": head["size"], "root": head["root"]}
+        self.stats["proofs_relayed"] += 1
+        return bundle
+
+    def consistency_between(self, old_size: int, new_size: int) -> dict:
+        return self._primary.consistency_between(old_size, new_size)
+
     # ---------------------------------------------------------- reporting --
     def summary(self) -> dict:
         return {"region": self.region,
                 "chunk_pulls": int(self.stats["chunk_pulls"]),
                 "chunk_pull_bytes": int(self.stats["chunk_pull_bytes"]),
                 "ensure_passthrough": int(self.stats["ensure_passthrough"]),
+                "proofs_relayed": int(self.stats["proofs_relayed"]),
                 "cache": self.cache.summary()}
 
 

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import collections
 import inspect
+import json
 import threading
 import time
 from typing import Callable, Dict, Optional
@@ -25,7 +26,11 @@ from typing import Callable, Dict, Optional
 import msgpack
 import numpy as np
 
-from repro.core.attest import TamperedRecordingError, verify
+from repro.attest.keys import KeySchedule
+from repro.attest.log import TransparencyLog, leaf_data
+from repro.attest.verifier import head_signable
+from repro.core.attest import (AttestationError, TamperedRecordingError,
+                               fingerprint, verify)
 from repro.core.metasync import DeltaSync
 from repro.core.recording import Recording
 from repro.obs.trace import NULL, traced
@@ -76,7 +81,8 @@ class RegistryService:
     """
 
     def __init__(self, store: RecordingStore, *, signing_key: bytes,
-                 record_profile=None, record_passes="all", tracer=None):
+                 record_profile=None, record_passes="all", tracer=None,
+                 keys: Optional[KeySchedule] = None):
         self._store = store
         self._key = signing_key
         self._record_profile = record_profile
@@ -86,6 +92,91 @@ class RegistryService:
         self._lock = threading.Lock()
         self._leases: Dict[str, threading.Event] = {}
         self.stats = collections.Counter()
+        # transparency log over the index: one leaf per publish, heads
+        # signed by the epoch key schedule (shared with clients through
+        # the Workspace; a bare service derives one from the signing key
+        # so directly-built service/client pairs agree at epoch 0)
+        self.keys = keys if keys is not None else KeySchedule(signing_key)
+        self.log = TransparencyLog()
+        self._log_index: Dict[str, int] = {}    # key -> latest leaf index
+        self._bootstrap_log()
+
+    # --------------------------------------------------- transparency log --
+    def _leaf_of(self, key: str, rec: Recording) -> dict:
+        """The log leaf a publish of ``rec`` under ``key`` commits to.
+        ``payload_digest`` doubles as the recording's executable
+        fingerprint, so an offline verifier can bind a replay quote to
+        this leaf without ever seeing the payload."""
+        return {"key": key, "manifest_fp": fingerprint(rec.manifest),
+                "payload_digest": fingerprint(rec.payload),
+                "epoch": self.keys.epoch}
+
+    def _append_leaf(self, leaf: dict) -> int:
+        idx = self.log.append(leaf_data(leaf["key"], leaf["manifest_fp"],
+                                        leaf["payload_digest"],
+                                        leaf["epoch"]))
+        self._log_index[leaf["key"]] = idx
+        self.stats["log_appends"] += 1
+        return idx
+
+    def _bootstrap_log(self) -> None:
+        """Rebuild the log view from a pre-populated store (a fresh
+        service handle over an existing root): every entry's stored leaf
+        re-appends in its original publish order, so proofs keep working
+        across process restarts.  Clients pinned to heads of the ORIGINAL
+        process only see consistent extensions as long as the rebuilt
+        prefix matches — which it does when the store kept every key's
+        latest leaf in index order."""
+        rows = []
+        for key in self._store.keys():
+            att = (self._store.entry(key).get("meta") or {}).get("attest")
+            if att:
+                rows.append((int(att.get("index", 0)), att["leaf"]))
+        for _idx, leaf in sorted(rows, key=lambda r: (r[0], r[1]["key"])):
+            self._append_leaf(leaf)
+
+    def _adopt(self, key: str) -> int:
+        """Fold a key published through ANOTHER service handle on the
+        shared store into this handle's log (read-modify-write stores
+        merge entries across handles; the log view follows)."""
+        att = (self._store.entry(key).get("meta") or {}).get("attest")
+        if not att:
+            raise AttestationError(
+                f"'{key}' is in the store but was never published through "
+                "the transparency log — refusing to serve a proof for it")
+        return self._append_leaf(att["leaf"])
+
+    def signed_head(self) -> dict:
+        """The current signed tree head: ``{size, root, epoch,
+        signature}``, signature epoch-bound under the key schedule."""
+        size, root = self.log.size, self.log.root()
+        return {"size": size, "root": root, "epoch": self.keys.epoch,
+                "signature": self.keys.sign(
+                    head_signable({"size": size, "root": root}))}
+
+    def proof_for(self, key: str) -> dict:
+        """Inclusion-proof bundle for ``key``'s latest published leaf
+        against the current signed head: ``{key, leaf, index, head,
+        path}``.  Served on every verified fetch."""
+        if key not in self._log_index:
+            self._adopt(key)
+        idx = self._log_index[key]
+        head = self.signed_head()
+        self.stats["proofs_served"] += 1
+        return {"key": key, "leaf": dict(self.log_leaf(idx)), "index": idx,
+                "head": head,
+                "path": self.log.inclusion_proof(idx, head["size"])}
+
+    def log_leaf(self, index: int) -> dict:
+        """Decode the raw leaf at ``index`` back into its field dict."""
+        return json.loads(self.log.entries[index].decode())
+
+    def consistency_between(self, old_size: int, new_size: int) -> dict:
+        """Consistency proof between two signed tree sizes (clients call
+        this with their pinned head's size on every later fetch)."""
+        self.stats["consistency_proofs_served"] += 1
+        return {"old_size": old_size, "new_size": new_size,
+                "proof": self.log.consistency_proof(old_size, new_size)}
 
     def _run_record_fn(self, record_fn: Callable) -> Recording:
         """Run a record-on-miss through a ``RecordingSession`` when the
@@ -133,7 +224,14 @@ class RegistryService:
         with traced(self.tracer, "registry.publish", "registry", key=key):
             wire = ds.pack({p: np.frombuffer(b, np.uint8) for p, b in
                             parts.items()})
+        # transparency-log leaf: committed to the tree AND stored in the
+        # entry meta, so a fresh service handle over this store rebuilds
+        # the same log (and a store-level swap that bypasses publish()
+        # leaves the log pointing at the ORIGINAL bytes — exactly what
+        # clients detect as a silent swap)
+        leaf = self._leaf_of(key, rec)
         entry = self._store.put(key, parts, meta={
+            "attest": {"leaf": leaf, "index": self.log.size},
             "name": rec.manifest.get("name", key),
             "static": rec.manifest.get("static", {}),
             # identity fields clients filter alternates by: a recording is
@@ -145,13 +243,16 @@ class RegistryService:
             # what a cold record-on-miss fetch bills on top of wall time
             "record_virtual_s": rec.manifest.get("record_virtual_s", 0.0),
             "published_s": time.time()})
+        idx = self._append_leaf(leaf)
         self.stats["publishes"] += 1
         return {"key": key, "version": entry["version"],
                 "full_bytes": sum(len(b) for b in parts.values()),
                 "wire_bytes": len(wire),
                 "parts_sent": ds.stats["leaves_sent"] - sent_before,
                 "chunks_new": entry["chunks_new"],
-                "chunks_reused": entry["chunks_reused"]}
+                "chunks_reused": entry["chunks_reused"],
+                "log_index": idx, "log_size": self.log.size,
+                "root": self.log.root()}
 
     # -------------------------------------------------------------- fetch --
     def fetch_bytes(self, key: str) -> bytes:

@@ -1,0 +1,407 @@
+"""repro.attest: transparency log, epoch key schedule, replay quotes.
+
+Covers the three attestation halves plus their trust boundaries:
+  * Merkle log: inclusion/consistency proofs verify exhaustively and
+    reject perturbation (RFC 9162 algorithms);
+  * key schedule: rotation keeps history verifiable, future epochs are a
+    typed protocol violation, stale epoch credentials fail loudly;
+  * end-to-end: a silently swapped (validly signed!) recording raises
+    ``SplitViewError`` BEFORE any ``pickle.loads``; quotes verify offline
+    and reject every bound-field perturbation.
+"""
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.api import Workspace
+from repro.attest import (KeySchedule, TransparencyLog, build_quote,
+                          leaf_data, proof_wire_bytes, verify_consistency,
+                          verify_inclusion, verify_quote)
+from repro.attest.quote import BOUND_FIELDS, quote_signable
+from repro.attest.verifier import head_signable
+from repro.core.attest import (AttestationError, FutureEpochError,
+                               QuoteVerificationError, RotatedKeyError,
+                               SplitViewError, TamperedRecordingError,
+                               canonical, fingerprint)
+from repro.core.recording import Recording
+from repro.registry.service import recording_to_parts
+
+KEY = b"attest-test-key"
+
+
+def synthetic_recording(payload_bytes: int = 50_000, seed: int = 0,
+                        trees: bytes = None, name: str = "synthetic",
+                        sign: bytes = KEY) -> Recording:
+    rng = np.random.default_rng(seed)
+    payload = rng.bytes(payload_bytes)
+    manifest = {"name": name, "static": {}, "record_wall_s": 2.0,
+                "exec_fingerprint": fingerprint(payload)}
+    rec = Recording(manifest, payload,
+                    trees if trees is not None else pickle.dumps((None,
+                                                                  None)))
+    return rec.sign_with(sign) if sign else rec
+
+
+# ---------------------------------------------------------- merkle log ----
+def test_log_inclusion_proofs_exhaustive():
+    """Every (leaf, size) pair up to n=17 verifies; any perturbed path
+    element or wrong index fails."""
+    log = TransparencyLog()
+    for i in range(17):
+        assert log.append(b"leaf-%d" % i) == i
+    for n in range(1, 18):
+        root = log.root(n)
+        for i in range(n):
+            path = log.inclusion_proof(i, n)
+            assert verify_inclusion(b"leaf-%d" % i, i, n, path, root)
+            assert not verify_inclusion(b"other", i, n, path, root)
+            if path:
+                bad = ["0" * 64] + path[1:]
+                assert not verify_inclusion(b"leaf-%d" % i, i, n, bad, root)
+    assert not verify_inclusion(b"leaf-0", 5, 3,
+                                log.inclusion_proof(0, 3), log.root(3))
+
+
+def test_log_consistency_proofs_exhaustive():
+    log = TransparencyLog()
+    for i in range(17):
+        log.append(b"leaf-%d" % i)
+    for old in range(1, 18):
+        for new in range(old, 18):
+            proof = log.consistency_proof(old, new)
+            assert verify_consistency(old, log.root(old), new,
+                                      log.root(new), proof)
+    # a forked tree: same sizes, different content -> proof rejects
+    fork = TransparencyLog()
+    for i in range(17):
+        fork.append(b"FORK-%d" % i)
+    assert not verify_consistency(8, log.root(8), 17, fork.root(17),
+                                  fork.consistency_proof(8, 17))
+
+
+def test_log_proof_size_is_logarithmic():
+    log = TransparencyLog()
+    for i in range(64):
+        log.append(b"e%d" % i)
+    assert len(log.inclusion_proof(31, 64)) == 6          # == log2(64)
+    assert proof_wire_bytes(log.inclusion_proof(31, 64)) == 6 * 32 + 112
+    assert log.root() == log.root(64)
+    with pytest.raises(AttestationError):
+        log.inclusion_proof(64, 64)
+    with pytest.raises(AttestationError):
+        log.root(65)
+
+
+def test_empty_log_root_is_defined():
+    assert TransparencyLog().root() == TransparencyLog.EMPTY_ROOT
+
+
+# -------------------------------------------------------- key schedule ----
+def test_key_schedule_shared_root_agrees_and_ratchets():
+    a, b = KeySchedule(KEY), KeySchedule(KEY)
+    sig0 = a.sign(b"payload")
+    assert sig0.startswith("0:") and b.verify(b"payload", sig0)
+    assert a.rotate() == 1 and a.epoch == 1
+    # epoch-0 signature STILL verifies after rotation (history is kept)
+    assert a.verify(b"payload", sig0)
+    sig1 = a.sign(b"payload")
+    assert sig1.startswith("1:") and sig1 != sig0
+    # ...but the epoch-1 signature is a future epoch for the unrotated
+    # peer: typed protocol violation, not a quiet False
+    with pytest.raises(FutureEpochError):
+        b.verify(b"payload", sig1)
+    b.rotate()
+    assert b.verify(b"payload", sig1)
+    assert not b.verify(b"payload", "1:" + "0" * 64)   # wrong mac
+    assert not b.verify(b"payload", "garbage")         # malformed -> False
+
+
+def test_workspace_refuses_rotated_away_epoch_key():
+    sched = KeySchedule(KEY)
+    old = sched.current()
+    sched.rotate()
+    assert old.stale
+    with pytest.raises(RotatedKeyError):
+        Workspace(registry=":memory:", key=old)
+    # the CURRENT epoch credential and the schedule itself both work
+    ws = Workspace(registry=":memory:", key=sched.current())
+    assert ws.keys is sched and ws.keys.epoch == 1
+    assert Workspace(registry=":memory:", key=sched).keys is sched
+
+
+# ------------------------------------------------- strict fingerprints ----
+def test_fingerprint_rejects_unfingerprintable_types():
+    """Satellite: the canonical encoder must never fall back to str() —
+    two distinct objects with identical str() would collide silently."""
+    class Sneaky:
+        def __init__(self, secret):
+            self.secret = secret
+
+        def __str__(self):
+            return "same"
+    with pytest.raises(TypeError):
+        fingerprint(Sneaky(1))
+    with pytest.raises(TypeError):
+        fingerprint({"nested": {"deep": object()}})
+    with pytest.raises(TypeError):
+        canonical({1, 2, 3})                            # sets are unordered
+
+
+def test_fingerprint_byte_compat_for_json_clean_values():
+    """The strict encoder is byte-identical to the old json.dumps path
+    for JSON-clean values — published registry keys must not drift."""
+    import hashlib
+    import json
+    parts = ({"kind": "decode", "batch": 4}, "mesh-fp", [1, 2], None, True)
+    h = hashlib.sha256()
+    for p in parts:
+        h.update(json.dumps(p, sort_keys=True).encode())
+    assert fingerprint(*parts) == h.hexdigest()
+    assert fingerprint(b"raw-bytes") == \
+        hashlib.sha256(b"raw-bytes").hexdigest()
+
+
+# ------------------------------------------------- service + log wiring ---
+def test_publish_appends_leaf_and_serves_verifiable_proofs():
+    ws = Workspace(registry=":memory:", key=KEY, net="wifi")
+    stats = [ws.service.publish(f"k/{i}", synthetic_recording(4_000, seed=i))
+             for i in range(5)]
+    assert [s["log_index"] for s in stats] == list(range(5))
+    assert stats[-1]["log_size"] == 5
+    bundle = ws.service.proof_for("k/2")
+    head = bundle["head"]
+    assert ws.keys.verify(head_signable(head), head["signature"])
+    leaf = bundle["leaf"]
+    assert leaf["key"] == "k/2"
+    assert verify_inclusion(
+        leaf_data(leaf["key"], leaf["manifest_fp"], leaf["payload_digest"],
+                  leaf["epoch"]),
+        bundle["index"], head["size"], bundle["path"], head["root"])
+
+
+def test_client_pins_head_and_verifies_across_growth():
+    ws = Workspace(registry=":memory:", key=KEY, net="wifi")
+    ws.service.publish("a", synthetic_recording(seed=1))
+    cl = ws.new_client(netem=ws.fresh_netem())
+    cl.fetch("a")
+    assert cl.stats["proofs_verified"] == 1 and cl._sth["size"] == 1
+    ws.service.publish("b", synthetic_recording(seed=2))   # log grows
+    cl.fetch("b")                   # consistency 1 -> 2 verified
+    assert cl.stats["proofs_verified"] == 2 and cl._sth["size"] == 2
+    assert ws.service.stats["consistency_proofs_served"] == 1
+    rep = ws.report()["attest"]
+    assert rep["log_size"] == 2 and rep["epoch"] == 0
+
+
+def test_unrotated_client_rejects_future_epoch_head():
+    """A service signing at epoch 1 serves a head a stale epoch-0 client
+    cannot verify — that MUST surface as a split-view error, not a quiet
+    acceptance of an unverifiable head."""
+    from repro.registry.client import RegistryClient
+    ws = Workspace(registry=":memory:", key=KEY, net="wifi")
+    ws.rotate_epoch()
+    ws.service.publish("k", synthetic_recording())
+    stale = RegistryClient(ws.service, netem=ws.fresh_netem(), key=KEY,
+                           keys=KeySchedule(KEY))    # fresh: epoch 0
+    with pytest.raises(SplitViewError):
+        stale.fetch("k")
+
+
+# ------------------------------------------------------ trust boundary ----
+SIDE_EFFECTS = []
+
+
+class _Evil:
+    def __reduce__(self):
+        return (SIDE_EFFECTS.append, ("pwned",))
+
+
+def test_split_view_detected_before_unpickle():
+    """THE attack the log exists for: the registry swaps a published
+    recording for a different one carrying a VALID signature (so the
+    HMAC check alone would admit it into ``pickle.loads``).  The
+    transparency leaf disagrees -> typed SplitViewError, zero unpickles."""
+    SIDE_EFFECTS.clear()
+    ws = Workspace(registry=":memory:", key=KEY, net="wifi")
+    ws.service.publish("victim", synthetic_recording(seed=1))
+    old_meta = ws.store.entry("victim")["meta"]
+    evil = synthetic_recording(seed=2, name="evil",
+                               trees=pickle.dumps(_Evil()))
+    ws.store.put("victim", recording_to_parts(evil, ws.store.chunk_size),
+                 meta=old_meta)
+    with pytest.raises(SplitViewError):
+        ws.client.fetch("victim")
+    assert SIDE_EFFECTS == []
+
+
+def test_tamper_matrix_over_variant_lease_publishes():
+    """Satellite: publish through ``VariantLeaseSet.complete`` (the
+    campaign's incremental-publish path), then swap in a mutant of each
+    recording part.  Every mutation is rejected with a typed error
+    BEFORE any unpickle: signature-breaking mutants die at the HMAC,
+    validly re-signed mutants die at the transparency leaf."""
+    SIDE_EFFECTS.clear()
+    good = synthetic_recording(seed=7)
+    evil_trees = pickle.dumps(_Evil())
+
+    def mutants():
+        m = dict(good.manifest, static={"swapped": True})
+        yield "manifest", Recording(m, good.payload,
+                                    good.trees).sign_with(KEY)
+        p = bytes(good.payload[:-1]) + b"\x00"
+        yield "payload", Recording(dict(good.manifest,
+                                        exec_fingerprint=fingerprint(p)),
+                                   p, evil_trees).sign_with(KEY)
+        yield "trees", Recording(dict(good.manifest), good.payload,
+                                 evil_trees, good.signature)  # not re-signed
+        yield "signature", Recording(dict(good.manifest), good.payload,
+                                     evil_trees, "0:" + "ab" * 32)
+
+    for part, mutant in mutants():
+        ws = Workspace(registry=":memory:", key=KEY, net="wifi")
+        lease = ws.service.variant_lease("campaign", ["k"])
+        assert lease.claim("k") is None
+        out = lease.complete("k", synthetic_recording(seed=7))
+        assert out["log_index"] == 0 and out["log_size"] == 1
+        old_meta = ws.store.entry("k")["meta"]
+        ws.store.put("k", recording_to_parts(mutant, ws.store.chunk_size),
+                     meta=old_meta)
+        # SplitViewError IS a TamperedRecordingError: one catch-site
+        with pytest.raises(TamperedRecordingError):
+            ws.client.fetch("k")
+        assert SIDE_EFFECTS == [], f"unpickle ran for {part} mutant"
+
+
+def test_store_entry_without_leaf_is_refused_a_proof():
+    ws = Workspace(registry=":memory:", key=KEY, net="wifi")
+    rogue = synthetic_recording(seed=9)
+    ws.store.put("rogue", recording_to_parts(rogue, ws.store.chunk_size),
+                 meta={"name": "rogue"})        # bypassed publish()
+    with pytest.raises(AttestationError):
+        ws.service.proof_for("rogue")
+    with pytest.raises(AttestationError):   # surfaces through fetch too
+        ws.client.fetch("rogue")
+
+
+def test_replica_relays_proofs_and_detects_regional_fork():
+    ws = Workspace(registry=":memory:", key=KEY, net="wifi")
+    ws.service.publish("k", synthetic_recording())
+    cl = ws.new_client(netem=ws.fresh_netem(), region="eu")
+    cl.fetch("k")
+    assert cl.stats["proofs_verified"] == 1
+    rr = ws.read_replica("eu")
+    assert rr.stats["proofs_relayed"] == 1
+    assert "proofs_relayed" in rr.summary()
+
+
+# -------------------------------------------------------------- quotes ----
+def _quoted_replay(ws, reg_key):
+    from repro.core.replay_passes import PlanExecutor, verified_plan
+    blob = ws.client.fetch(reg_key)
+    plan, _rec = verified_plan(blob, KEY, "all", jobs=4)
+    ex = PlanExecutor(netem=ws.fresh_netem())
+    ex.run(plan)
+    return ex.quote(ws.keys, recording_key=reg_key,
+                    head=ws.service.signed_head())
+
+
+def test_quote_roundtrip_offline_and_perturbation_rejection():
+    ws = Workspace(registry=":memory:", key=KEY, net="wifi")
+    ws.service.publish("q/prefill", synthetic_recording(seed=3))
+    quote = _quoted_replay(ws, "q/prefill")
+    head = ws.service.signed_head()
+    bundle = ws.service.proof_for("q/prefill")
+
+    offline = KeySchedule(KEY)      # the remote verifier's whole state
+    rep = verify_quote(quote, head=head, keys=offline, leaf=bundle["leaf"],
+                       proof=bundle["path"], leaf_index=bundle["index"])
+    assert rep["ok"] and rep["inclusion_checked"]
+    assert rep["recording_key"] == "q/prefill"
+
+    for field in BOUND_FIELDS:
+        bad = dict(quote)
+        bad[field] = 999 if isinstance(quote[field], int) \
+            else quote[field] + "x"
+        with pytest.raises(QuoteVerificationError):
+            verify_quote(bad, head=head, keys=offline)
+    # annotations are NOT bound: editing one leaves the quote valid
+    relabeled = dict(quote, passes="forged-annotation")
+    assert verify_quote(relabeled, head=head, keys=offline)["ok"]
+    # ...but a wrong key schedule is
+    with pytest.raises(QuoteVerificationError):
+        verify_quote(quote, head=head, keys=KeySchedule(b"other-root"))
+
+
+def test_quote_survives_epoch_rotation():
+    ws = Workspace(registry=":memory:", key=KEY, net="wifi")
+    ws.service.publish("q/prefill", synthetic_recording(seed=4))
+    quote = _quoted_replay(ws, "q/prefill")
+    head = ws.service.signed_head()
+    assert ws.rotate_epoch() == 1
+    verifier = KeySchedule(KEY)
+    verifier.rotate()
+    assert verify_quote(quote, head=head, keys=verifier)["ok"]
+    assert quote["epoch"] == 0      # quoted in the epoch it ran under
+
+
+def test_quote_signable_requires_bound_fields():
+    with pytest.raises(ValueError):
+        quote_signable({"recording_key": "k"})
+    sched = KeySchedule(KEY)
+    head = {"size": 0, "root": TransparencyLog.EMPTY_ROOT, "epoch": 0,
+            "signature": sched.sign(head_signable(
+                {"size": 0, "root": TransparencyLog.EMPTY_ROOT}))}
+    q = build_quote(sched, recording_key="k", exec_fingerprint="e",
+                    plan_fingerprint="p", frontier_digest="f", head=head,
+                    annotations={"signature": "cannot-shadow", "extra": 1})
+    assert q["extra"] == 1 and q["signature"] != "cannot-shadow"
+    assert verify_quote(q, head=head, keys=sched)["ok"]
+
+
+def test_offline_verifier_imports_no_model_or_registry_code():
+    import repro.attest.verifier as V
+    src = open(V.__file__).read()
+    for forbidden in ("repro.models", "repro.configs", "repro.training",
+                      "repro.serving", "repro.registry", "repro.record",
+                      "jax"):
+        assert f"import {forbidden}" not in src
+        assert f"from {forbidden}" not in src
+
+
+# -------------------------------------------------------------- schema ----
+def test_workspace_report_attest_section_validates():
+    from repro.obs.schema import SchemaError, check_workspace_report
+    ws = Workspace(registry=":memory:", key=KEY, net="wifi")
+    ws.service.publish("k", synthetic_recording())
+    ws.client.fetch("k")
+    rep = check_workspace_report(ws.report())
+    assert rep["attest"]["proofs_verified"] == 1
+    assert rep["attest"]["proof_bytes"] > 0
+    broken = dict(rep, attest={"epoch": 0})
+    with pytest.raises(SchemaError):
+        check_workspace_report(broken)
+
+
+def test_bench_attest_schema_flags():
+    from repro.obs.schema import BENCH_CHECKS, SchemaError
+    check = BENCH_CHECKS["BENCH_attest.json"]
+    good = {
+        "proof_ladder": [{"entries": n, "proof_hashes": 1,
+                          "proof_wire_bytes": 144, "log2_bound": 6}
+                         for n in (1, 2, 4)],
+        "verify_overhead": {"warm_fetch_unverified_s": 1.0,
+                            "warm_fetch_verified_s": 1.01,
+                            "overhead_pct": 1.0, "proof_bytes": 112},
+        "split_view": {"detected": True},
+        "quote": {"bound_fields": list(BOUND_FIELDS),
+                  "perturbations_rejected": list(BOUND_FIELDS)},
+        "split_view_detected": True, "verify_overhead_le_5pct": True,
+        "offline_verifier_no_model_imports": True,
+        "proof_growth_sublinear": True,
+    }
+    check(good)
+    with pytest.raises(SchemaError):
+        check(dict(good, split_view_detected=False))
+    with pytest.raises(SchemaError):
+        check({k: v for k, v in good.items() if k != "quote"})

@@ -244,15 +244,20 @@ def test_client_resumable_fetch_and_byte_accounting():
     assert blob == rec.to_bytes()
     assert cl.stats["chunks_fetched"] == total_chunks
     assert cl.stats["chunk_bytes_fetched"] == total_comp
-    # all compressed bytes crossed the wire exactly once (plus index RPCs)
-    chunk_rx = net.bytes_received - 2 * (64 + 48 * total_chunks)
+    # all compressed bytes crossed the wire exactly once (plus index RPCs
+    # and the transparency-log proof the completed fetch verified)
+    proof_rx = cl.stats["proof_bytes"]
+    assert cl.stats["proofs_verified"] == 1
+    chunk_rx = net.bytes_received - 2 * (64 + 48 * total_chunks) - proof_rx
     assert chunk_rx == total_comp
 
-    # a second fetch is free on the wire: every chunk is cached locally
+    # a second fetch is free on the wire: every chunk is cached locally —
+    # only the index RPC plus a fresh (async-billed) inclusion proof
     net.reset()
     assert cl.fetch("k") == blob
-    assert net.bytes_received == 64 + 48 * total_chunks   # index RPC only
-    assert net.round_trips == 1
+    proof_rx2 = cl.stats["proof_bytes"] - proof_rx
+    assert net.bytes_received == 64 + 48 * total_chunks + proof_rx2
+    assert net.round_trips == 1                     # proofs add no RTT
 
 
 def test_record_and_serve_derive_identical_decode_keys():
@@ -320,6 +325,8 @@ def test_delta_republish_ships_and_fetches_only_changed_chunks():
     blob2 = cl.fetch("k")
     assert blob2 == rec2.to_bytes()
     chunk_rx = net.bytes_received - (64 + 48 * len(svc.entry("k")["chunks"]))
+    # (chunk_rx still includes the ~200B transparency proof — well inside
+    # the delta bound)
     assert chunk_rx < s1["full_bytes"] // 10           # delta fetch
 
 
